@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing, CSV emission, TPU roofline model."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+# TPU v5e roofline constants (assignment spec)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-clock seconds per call (blocking on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def tpu_model_time(flops: float, bytes_hbm: float) -> float:
+    """Single-chip roofline time: max of compute and memory terms."""
+    return max(flops / PEAK_FLOPS_BF16, bytes_hbm / HBM_BW)

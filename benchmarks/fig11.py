@@ -1,0 +1,52 @@
+"""Paper Fig. 11 — effect of batching queries.
+
+The paper amortizes OpenCL/PCIe setup over ~300 queries for a 2.8x E2E gain.
+Here the per-call overhead is Python+jit dispatch; sweeping queries-per-call
+reproduces the same amortization curve shape on this stack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs.simgnn_aids import CONFIG as CFG
+from repro.core.batching import pad_graphs
+from repro.core.simgnn import init_simgnn_params, pair_score
+from repro.data.graphs import query_pairs
+
+SWEEP = (1, 8, 32, 128, 256, 512)
+
+
+def run():
+    params = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+    pairs = query_pairs(41, max(SWEEP))
+    lhs = pad_graphs([p[0] for p in pairs], CFG.n_node_labels, 64)
+    rhs = pad_graphs([p[1] for p in pairs], CFG.n_node_labels, 64)
+    fn = jax.jit(pair_score)
+
+    qps_at = {}
+    for b in SWEEP:
+        args = (lhs.adj[:b], lhs.feats[:b], lhs.mask[:b],
+                rhs.adj[:b], rhs.feats[:b], rhs.mask[:b])
+        jax.block_until_ready(fn(params, *args))          # per-shape warm
+        n_calls = max(1, 512 // b)
+
+        def run_all():
+            out = None
+            for _ in range(n_calls):
+                out = fn(params, *args)
+            return out
+
+        t = time_fn(run_all, warmup=1, iters=3)
+        qps_at[b] = n_calls * b / t
+    base = qps_at[SWEEP[0]]
+    for b in SWEEP:
+        emit(f"fig11.batch_{b}", 1e6 / qps_at[b],
+             f"qps={qps_at[b]:,.0f}_speedup={qps_at[b] / base:.2f}x_paper_2.8x_at_300")
+    return qps_at
+
+
+if __name__ == "__main__":
+    run()

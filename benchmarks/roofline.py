@@ -1,0 +1,118 @@
+"""Roofline analysis from the dry-run artifacts (assignment §ROOFLINE).
+
+Per (arch x shape x mesh) cell, derive the three terms (seconds/step):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s         (197 TF bf16)
+    memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+    collective = wire_bytes_per_device / link_bw            (50 GB/s/link)
+
+Sources: `hlo_flops` / `hlo_mem_bytes` / `collectives.bytes_wire` are the
+loop-corrected per-device numbers from launch/hlo_analysis.py (the raw
+cost_analysis() is also recorded but under-counts scan bodies — see that
+module's docstring). Dominant term = the bottleneck; the useful-compute
+ratio MODEL_FLOPS / (HLO_FLOPs x devices) flags remat/capacity waste.
+
+Caveats (recorded in EXPERIMENTS.md):
+  * HLO comes from the CPU-backend SPMD partition — bf16 compute is
+    legalized to f32 on CPU, so byte-sized terms are ~2x a TPU lowering;
+  * memory term is a fusion-boundary estimate, an upper bound vs real TPU
+    fusion.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+def load_cells(art_dir: str = ART_DIR) -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        d = json.load(open(f))
+        d["_file"] = os.path.basename(f)
+        cells.append(d)
+    return cells
+
+
+def terms(cell: dict) -> dict | None:
+    if cell.get("skipped") or "error" in cell:
+        return None
+    n = cell["n_devices"]
+    t_compute = cell["hlo_flops"] / PEAK_FLOPS_BF16
+    t_memory = cell["hlo_mem_bytes"] / HBM_BW
+    t_coll = cell["collectives"]["bytes_wire"] / ICI_BW
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    useful = cell["model_flops"] / max(1, cell["hlo_flops"] * n)
+    bound = max(t_compute, t_memory, t_coll)
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "t_compute": t_compute, "t_memory": t_memory, "t_collective": t_coll,
+        "dominant": dom[0], "step_time_lb": bound,
+        "useful_ratio": useful,
+        "roofline_fraction": t_compute / bound if bound else 0.0,
+        "model_flops": cell["model_flops"],
+        "hlo_flops_dev": cell["hlo_flops"],
+    }
+
+
+_FIX_HINT = {
+    "compute": "at the compute roof: raise useful-ratio (less remat/capacity slack)",
+    "memory": "fuse/shrink fusion-boundary buffers (chunked loss, flash-attn kernel) to cut HBM traffic",
+    "collective": "re-shard the dominant collective (MoE dispatch / FSDP gathers) or overlap with compute",
+}
+
+
+def render_markdown(art_dir: str = ART_DIR) -> str:
+    rows = []
+    skips = []
+    for cell in load_cells(art_dir):
+        t = terms(cell)
+        if t is None:
+            skips.append(f"| {cell['arch']} | {cell['shape']} | {cell.get('mesh','-')} | "
+                         f"{cell.get('note', cell.get('error', ''))[:90]} |")
+            continue
+        rows.append(t)
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | roofline frac | useful ratio | what moves it |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for t in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        out.append(
+            f"| {t['arch']} | {t['shape']} | {t['mesh']} | "
+            f"{t['t_compute']:.3f} | {t['t_memory']:.3f} | "
+            f"{t['t_collective']:.3f} | **{t['dominant']}** | "
+            f"{t['roofline_fraction']:.2f} | {t['useful_ratio']:.2f} | "
+            f"{_FIX_HINT[t['dominant']]} |")
+    if skips:
+        out += ["", "Skipped cells (DESIGN.md §5 rules):",
+                "| arch | shape | mesh | reason |", "|---|---|---|---|"] + skips
+    return "\n".join(out)
+
+
+def run():
+    from benchmarks.common import emit
+    cells = [t for t in (terms(c) for c in load_cells()) if t]
+    if not cells:
+        emit("roofline.no_artifacts", 0.0, "run_launch.dryrun_first")
+        return
+    n_ok = len(cells)
+    worst = min(cells, key=lambda t: t["roofline_fraction"])
+    coll = max(cells, key=lambda t: t["t_collective"] / max(t["step_time_lb"], 1e-12))
+    for t in cells:
+        emit(f"roofline.{t['arch']}.{t['shape']}.{t['mesh']}",
+             t["step_time_lb"] * 1e6,
+             f"dom={t['dominant']}_frac={t['roofline_fraction']:.2f}"
+             f"_useful={t['useful_ratio']:.2f}")
+    emit("roofline.summary", 0.0,
+         f"cells={n_ok}_worst={worst['arch']}/{worst['shape']}"
+         f"_most_collective={coll['arch']}/{coll['shape']}")
+
+
+if __name__ == "__main__":
+    print(render_markdown())

@@ -1,0 +1,32 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV lines. Tables 4/5/6 and Fig. 11
+reproduce the paper's experiment structure (see each module's docstring);
+`roofline` renders the LM-substrate dry-run cells (§Roofline).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for name in ("table4", "table5", "table6", "fig11", "roofline"):
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+        except Exception as e:  # keep the suite going; record the failure
+            failures.append(name)
+            print(f"{name}.ERROR,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Analytic FLOP/byte model of one SimGNN query (pair of N-node graphs).
+
+Used by table5/table6 to put the pipeline on the TPU roofline (this container
+has no TPU, so modeled time = max(compute, memory) term — same method as the
+assignment's §Roofline, applied at SimGNN scale).
+"""
+
+from __future__ import annotations
+
+from repro.configs.simgnn_aids import CONFIG as CFG
+
+
+def per_query_flops(n_nodes: int, avg_edges: float = 27.6) -> float:
+    """Both graphs through GCNx3 + Att + NTN + FCN."""
+    dims = (CFG.n_node_labels,) + tuple(CFG.gcn_dims)
+    f = CFG.gcn_dims[-1]
+    k = CFG.ntn_k
+    flops = 0.0
+    for fi, fo in zip(dims[:-1], dims[1:]):
+        ft = 2 * n_nodes * fi * fo                   # feature transform (HW)
+        agg = 2 * (2 * avg_edges + n_nodes) * fo     # edge-list aggregation
+        flops += ft + agg
+    flops += 2 * n_nodes * f + 2 * f * f + 2 * n_nodes * f  # Att stage
+    flops *= 2                                        # two graphs
+    flops += 2 * f * f * k + 2 * 2 * f * k            # NTN
+    flops += 2 * (k * 8 + 8 * 4 + 4)                  # FCN
+    return flops
+
+
+def per_query_flops_mxu(n_nodes: int, batch: int) -> float:
+    """Effective FLOPs on the 128x128 MXU: contraction/output dims pad to
+    the systolic tile, rows ride the (batch x nodes) dimension. This is the
+    *structural* utilization model — the honest denominator for a modeled
+    v5e number (raw per_query_flops assumes perfect utilization on 29-wide
+    matrices, which the MXU cannot deliver)."""
+    def pad(x, m):
+        return -(-x // m) * m
+
+    dims = (CFG.n_node_labels,) + tuple(CFG.gcn_dims)
+    f = CFG.gcn_dims[-1]
+    k = CFG.ntn_k
+    rows = batch * n_nodes                  # FT rows across the fused batch
+    flops = 0.0
+    for fi, fo in zip(dims[:-1], dims[1:]):
+        flops += 2 * pad(rows, 8) * pad(fi, 128) * pad(fo, 128) / batch
+        flops += 2 * pad(batch * n_nodes, 8) * pad(n_nodes, 128) * pad(fo, 128) / batch
+    flops += 2 * pad(batch, 8) * pad(f, 128) * pad(f, 128) / batch      # Att
+    flops += 2 * pad(batch, 8) * pad(f, 128) * pad(k * f, 128) / batch  # NTN
+    return flops
+
+
+DISPATCH_FLOOR_S = 5e-6      # per-executable launch overhead, amortized
+
+
+def per_query_bytes(n_nodes: int, batch: int) -> float:
+    """HBM traffic per query with the fused pipeline: inputs read once,
+    weights amortized over the batch (paper's 'read each element only once')."""
+    dims = (CFG.n_node_labels,) + tuple(CFG.gcn_dims)
+    in_bytes = 2 * (n_nodes * CFG.n_node_labels + n_nodes * n_nodes) * 2
+    w_elems = sum(fi * fo for fi, fo in zip(dims[:-1], dims[1:]))
+    f = CFG.gcn_dims[-1]
+    w_elems += f * f + CFG.ntn_k * f * f + CFG.ntn_k * 2 * f + 200
+    out_bytes = 4
+    return in_bytes + out_bytes + (w_elems * 2) / max(batch, 1)

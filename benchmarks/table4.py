@@ -1,0 +1,107 @@
+"""Paper Table 4 — impact of GCN architecture optimizations.
+
+Paper rows (FPGA)                  -> TPU-adaptation rows here
+  Baseline (shared engine,            `baseline`: per-layer jit boundaries,
+  per-layer, dense 64-pad)            serial graph processing, global 64-pad
+  +Inter-Layer Pipeline             -> `fused`: whole GCN+Att+NTN+FCN in one
+                                       jit region, both graphs batched
+  +Extended Sparsity                -> `bucketed`: + size buckets (8/16/32/64)
+                                       removing structural zeros (DESIGN.md §2)
+
+Metric: wall-clock per query batch on CPU (relative speedups are the
+reproduction target: paper got 1.56x then 2.27x cumulative) plus the
+activation-sparsity measurement the paper exploits (52%/47%).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs.simgnn_aids import CONFIG as CFG
+from repro.core.batching import bucket_pairs, pad_graphs
+from repro.core.gcn import (activation_sparsity, gcn_layer, gcn_stack,
+                            normalized_adjacency)
+from repro.core.simgnn import (attention_pooling, fcn_head, init_simgnn_params,
+                               ntn_scores, pair_score)
+from repro.data.graphs import query_pairs
+
+N_QUERIES = 512
+
+
+def _pad_all(pairs, n):
+    lhs = pad_graphs([p[0] for p in pairs], CFG.n_node_labels, n)
+    rhs = pad_graphs([p[1] for p in pairs], CFG.n_node_labels, n)
+    return lhs, rhs
+
+
+def baseline_scores(params, lhs, rhs):
+    """Paper-baseline analogue: each GCN layer its own jit region (off-chip
+    round trips between layers), graphs processed serially, global max pad."""
+    layer = jax.jit(lambda p, a, h, m: gcn_layer(p, a, h, m))
+    pool = jax.jit(lambda p, h, m: attention_pooling(p, h, m))
+    head = jax.jit(lambda p, s1, s2: fcn_head(p["fcn"],
+                                              ntn_scores(p["ntn"], s1, s2)))
+    hgs = []
+    for gb in (lhs, rhs):
+        a = jax.jit(normalized_adjacency)(gb.adj, gb.mask)
+        h = gb.feats
+        for lp in params["gcn"]:
+            h = layer(lp, a, h, gb.mask)
+            h.block_until_ready()
+        hgs.append(pool(params["att"], h, gb.mask))
+    return head(params, hgs[0], hgs[1])
+
+
+def run():
+    params = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+    pairs = query_pairs(11, N_QUERIES)
+    lhs64, rhs64 = _pad_all(pairs, 64)
+
+    fused = jax.jit(pair_score)
+
+    t_base = time_fn(lambda: baseline_scores(params, lhs64, rhs64),
+                     warmup=1, iters=5)
+    t_fused = time_fn(lambda: fused(params, lhs64.adj, lhs64.feats, lhs64.mask,
+                                    rhs64.adj, rhs64.feats, rhs64.mask),
+                      warmup=1, iters=5)
+
+    buckets = bucket_pairs(pairs, CFG.n_node_labels)
+    compiled = {b: jax.jit(pair_score) for b in buckets}
+    for b, (lh, rh, _) in buckets.items():   # warm
+        jax.block_until_ready(compiled[b](params, lh.adj, lh.feats, lh.mask,
+                                          rh.adj, rh.feats, rh.mask))
+
+    def bucketed():
+        outs = []
+        for b, (lh, rh, _) in buckets.items():
+            outs.append(compiled[b](params, lh.adj, lh.feats, lh.mask,
+                                    rh.adj, rh.feats, rh.mask))
+        return outs
+
+    t_bucket = time_fn(bucketed, warmup=1, iters=5)
+
+    per_q = 1e6 / N_QUERIES
+    emit("table4.baseline_per_layer_globalpad", t_base * per_q, "speedup=1.00x")
+    emit("table4.fused_pipeline", t_fused * per_q,
+         f"speedup={t_base / t_fused:.2f}x_paper_1.56x")
+    emit("table4.fused_plus_bucketing", t_bucket * per_q,
+         f"speedup={t_base / t_bucket:.2f}x_paper_2.27x")
+
+    # activation sparsity the paper exploits (52% / 47% on layers 2/3)
+    a = normalized_adjacency(lhs64.adj, lhs64.mask)
+    h = lhs64.feats
+    sp = []
+    for lp in params["gcn"]:
+        h = gcn_layer(lp, a, h, lhs64.mask)
+        sp.append(float(activation_sparsity(h, lhs64.mask)))
+    emit("table4.relu_sparsity_l2_l3", 0.0,
+         f"measured={sp[1]:.2f}/{sp[2]:.2f}_paper_0.52/0.47")
+    return {"t_base": t_base, "t_fused": t_fused, "t_bucket": t_bucket,
+            "sparsity": sp}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Train an assigned LM architecture (reduced config) end-to-end on CPU:
+data pipeline -> train_step (AdamW, remat) -> checkpoint/restart loop.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen1.5-4b --steps 30
+
+Any of the 10 assigned ids works (see repro/configs). On a real fleet drop
+--reduced and pass --mesh single|multi.
+"""
+
+import argparse
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+    train.main(["--model", args.arch, "--reduced", "--steps", str(args.steps),
+                "--batch", "8", "--seq-len", "128", "--lr", "3e-3",
+                "--ckpt-dir", "/tmp/repro_lm_ckpt"])
+
+
+if __name__ == "__main__":
+    main()

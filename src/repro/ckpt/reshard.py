@@ -1,0 +1,27 @@
+"""Elastic resharding: move a checkpoint from mesh A to mesh B.
+
+Checkpoints store full (unsharded) leaves per host-shard file; restoring onto
+a different mesh is therefore just `device_put` with the target mesh's
+NamedShardings — the elastic-scaling path when the fleet grows/shrinks
+between restarts (DESIGN.md §6). `reshard_live` re-lays-out an in-memory
+tree without round-tripping disk (for in-job elasticity where the runtime
+re-forms the mesh after losing a slice).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.ckpt import manager
+
+
+def reshard_live(tree, shardings):
+    """Re-lay-out an in-memory pytree onto new NamedShardings."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jax.device_get(x), s)
+        if s is not None else x, tree, shardings)
+
+
+def restore_on_mesh(directory: str, step: int, like, shardings):
+    """Restore a checkpoint saved on any mesh onto `shardings` (target mesh)."""
+    return manager.restore(directory, step, like, shardings=shardings)

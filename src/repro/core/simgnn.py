@@ -1,0 +1,143 @@
+"""SimGNN (Bai et al., WSDM'19) — the end-to-end application accelerated by
+SPA-GCN. Pipeline (paper §4.1):
+
+  1. GCN x3            -> node embeddings H in R^{|V| x F}
+  2. Att pooling        -> graph embedding h_G = sum_n sigmoid(h_n^T c) h_n,
+                           c = tanh(W_att * mean_n h_n)
+  3. Neural Tensor Net  -> K similarity scores
+                           s = ReLU(h1^T W[k] h2 + V [h1;h2] + b)
+  4. FCN                -> single similarity score in (0, 1)
+
+The whole pair-score is one fused jit region (the paper's cross-stage dataflow
+pipeline — DESIGN.md §2); `kernels/fused_gcn.py` provides the Pallas TPU
+realization of stages 1-2 and `kernels/simgnn_head.py` of stages 3-4.
+
+Everything is batched over pairs: inputs are two `GraphBatch`es of equal batch.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gcn import gcn_stack, init_gcn_params, normalized_adjacency
+
+Array = jax.Array
+
+
+class SimGNNConfig(NamedTuple):
+    """Defaults follow the released SimGNN reference used as the paper's
+    CPU/GPU baseline [45]: GCN filters 128/64/32, NTN K=16, FCN 16->8->4->1."""
+    n_node_labels: int = 29           # AIDS one-hot node types
+    gcn_dims: tuple = (128, 64, 32)
+    ntn_k: int = 16
+    fcn_dims: tuple = (8, 4)          # hidden dims; final scalar layer appended
+    max_nodes: int = 64
+    dtype: str = "float32"
+
+    @property
+    def feature_dims(self):
+        return (self.n_node_labels,) + tuple(self.gcn_dims)
+
+
+def init_simgnn_params(key: Array, cfg: SimGNNConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k_gcn, k_att, k_ntn_w, k_ntn_v, k_fcn = jax.random.split(key, 5)
+    f = cfg.gcn_dims[-1]
+    params = {
+        "gcn": init_gcn_params(k_gcn, cfg.feature_dims, dtype),
+        "att": {"w": jax.random.normal(k_att, (f, f), dtype) / jnp.sqrt(f)},
+        "ntn": {
+            "w": jax.random.normal(k_ntn_w, (cfg.ntn_k, f, f), dtype) / f,
+            "v": jax.random.normal(k_ntn_v, (cfg.ntn_k, 2 * f), dtype) / jnp.sqrt(2.0 * f),
+            "b": jnp.zeros((cfg.ntn_k,), dtype),
+        },
+        "fcn": [],
+    }
+    dims = (cfg.ntn_k,) + tuple(cfg.fcn_dims) + (1,)
+    for i in range(len(dims) - 1):
+        k_fcn, sub = jax.random.split(k_fcn)
+        scale = jnp.sqrt(2.0 / (dims[i] + dims[i + 1])).astype(dtype)
+        params["fcn"].append({
+            "w": jax.random.normal(sub, (dims[i], dims[i + 1]), dtype) * scale,
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        })
+    return params
+
+
+def attention_pooling(att_params, h: Array, mask: Array) -> Array:
+    """Global context-aware attention (paper Eq. 3). h: [B, N, F] -> [B, F]."""
+    n_valid = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)   # [B, 1]
+    mean_h = jnp.sum(h * mask[..., None], axis=-2) / n_valid             # [B, F]
+    # c = tanh(W_att mean(h))  — Eq. 5 rewrite sum(W h_n) = W sum(h_n) applies
+    # automatically here because we matmul the mean once (adder reuse).
+    c = jnp.tanh(jnp.einsum("bf,fg->bg", mean_h, att_params["w"]))       # [B, F]
+    a = jax.nn.sigmoid(jnp.einsum("bnf,bf->bn", h, c))                   # [B, N]
+    a = a * mask
+    return jnp.einsum("bn,bnf->bf", a, h)                                # [B, F]
+
+
+def ntn_scores(ntn_params, hg1: Array, hg2: Array) -> Array:
+    """Neural Tensor Network (paper Eq. 4). hg*: [B, F] -> [B, K]."""
+    bilinear = jnp.einsum("bf,kfg,bg->bk", hg1, ntn_params["w"], hg2)
+    cat = jnp.concatenate([hg1, hg2], axis=-1)                           # [B, 2F]
+    linear = jnp.einsum("bf,kf->bk", cat, ntn_params["v"])
+    return jax.nn.relu(bilinear + linear + ntn_params["b"])
+
+
+def fcn_head(fcn_params, s: Array) -> Array:
+    """FCN reducing [B, K] -> [B] similarity in (0,1)."""
+    for i, p in enumerate(fcn_params):
+        s = jnp.einsum("bi,ij->bj", s, p["w"]) + p["b"]
+        if i + 1 < len(fcn_params):
+            s = jax.nn.relu(s)
+    return jax.nn.sigmoid(s[..., 0])
+
+
+def node_embeddings(params, adj: Array, feats: Array, mask: Array) -> Array:
+    """Stage 1: [B, N, n_labels] -> [B, N, F]. `adj` is the *raw* adjacency;
+    normalization happens here (the paper precomputes A' on the host — a
+    one-time O(N^2) cost folded into the same jit region on TPU)."""
+    a_norm = normalized_adjacency(adj, mask)
+    return gcn_stack(params["gcn"], a_norm, feats, mask)
+
+
+def graph_embedding(params, adj: Array, feats: Array, mask: Array) -> Array:
+    h = node_embeddings(params, adj, feats, mask)
+    return attention_pooling(params["att"], h, mask)
+
+
+def pair_score(params, adj1, feats1, mask1, adj2, feats2, mask2) -> Array:
+    """Full SimGNN pipeline for a batch of graph pairs -> [B] scores.
+
+    The paper runs the two graphs *serially* through one GCN engine to save
+    FPGA area (§4.2); on TPU area-reuse is free (same weights), so we fold the
+    two graphs into one batched GCN call of size 2B — identical math, better
+    MXU occupancy. This is a documented hardware adaptation (DESIGN.md §2).
+    """
+    adj = jnp.concatenate([adj1, adj2], axis=0)
+    feats = jnp.concatenate([feats1, feats2], axis=0)
+    mask = jnp.concatenate([mask1, mask2], axis=0)
+    hg = graph_embedding(params, adj, feats, mask)          # [2B, F]
+    hg1, hg2 = jnp.split(hg, 2, axis=0)
+    s = ntn_scores(params["ntn"], hg1, hg2)
+    return fcn_head(params["fcn"], s)
+
+
+def pair_score_serial_baseline(params, adj1, feats1, mask1, adj2, feats2, mask2) -> Array:
+    """Paper-faithful serial variant (GCN engine reused for G1 then G2) —
+    kept as the faithful baseline for benchmarks; numerically identical."""
+    hg1 = graph_embedding(params, adj1, feats1, mask1)
+    hg2 = graph_embedding(params, adj2, feats2, mask2)
+    s = ntn_scores(params["ntn"], hg1, hg2)
+    return fcn_head(params["fcn"], s)
+
+
+def simgnn_loss(params, batch) -> Array:
+    """MSE against exp(-normalized GED) targets (SimGNN training objective).
+    batch: dict with adj1, feats1, mask1, adj2, feats2, mask2, target [B]."""
+    pred = pair_score(params, batch["adj1"], batch["feats1"], batch["mask1"],
+                      batch["adj2"], batch["feats2"], batch["mask2"])
+    return jnp.mean((pred - batch["target"]) ** 2)

@@ -1,0 +1,151 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the production mesh.
+
+Axis roles (DESIGN.md §6):
+  pod    — pure data parallelism across pods (gradient all-reduce over DCN)
+  data   — data parallelism for the batch *and* FSDP for parameters
+           (params/optimizer state sharded over `data`, all-gathered on use —
+           XLA SPMD inserts the collectives from the NamedSharding specs)
+  model  — tensor parallelism: attention heads, FFN hidden, vocab, experts'
+           hidden dim; also the KV-cache sequence shards for decode (SP).
+
+Rules are name-based over the param-tree paths, then right-aligned to the
+leaf's rank so the stacked scan-group leading axis is automatically
+replicated. `None` mesh (single-CPU tests) makes every helper a no-op.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex over '/'-joined path, base spec for the *unstacked* param)
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed/table$",        ("model", "data")),   # [V, D] vocab-TP, D-FSDP
+    (r"lm_head/w$",          ("data", "model")),   # [D, V]
+    (r"(wq|wk|wv)$",         ("data", "model")),   # [D, H*hd]
+    (r"(wq_b|wk_b|wv_b)$",   ("model",)),          # qkv bias [H*hd]
+    (r"wo$",                 ("model", "data")),   # [H*hd, D]
+    (r"mlp/w_in$",           ("data", "model")),   # [D, 2F] (fused gate+up)
+    (r"mlp/w_out$",          ("model", "data")),   # [F, D]
+    (r"moe/router$",         (None, None)),        # [D, E] small, replicated
+    (r"moe/w_in$",           (None, "data", "model")),   # [E, D, 2F]
+    (r"moe/w_out$",          (None, "model", "data")),   # [E, F, D]
+    (r"mamba/in_proj$",      ("data", "model")),   # [D, 2*Din]
+    (r"mamba/conv_w$",       ("model", None)),     # [Din, k]
+    (r"mamba/conv_b$",       ("model",)),
+    (r"mamba/x_proj$",       ("model", None)),     # [Din, R+2N]
+    (r"mamba/dt_proj$",      (None, "model")),     # [R, Din]
+    (r"mamba/dt_bias$",      ("model",)),
+    (r"mamba/a_log$",        ("model", None)),     # [Din, N]
+    (r"mamba/d$",            ("model",)),
+    (r"mamba/out_proj$",     ("model", "data")),   # [Din, D]
+    (r"rwkv/(wr|wk|wv|wg)$", ("data", "model")),
+    (r"rwkv/wo$",            ("model", "data")),
+    (r"rwkv/(w0|u)$",        ("model", None)),     # [H, K]
+    (r"rwkv/(lora_a\w*)$",   (None, None)),        # tiny LoRAs, replicated
+    (r"rwkv/(lora_b\w*)$",   (None, None)),
+    (r"rwkv/(mix_\w+)$",     (None,)),
+    (r"cmix/w_in$",          ("data", "model")),
+    (r"cmix/w_out$",         ("model", "data")),
+    (r"cmix/wr$",            ("data", "model")),
+    (r"norm|scale|ln",       (None,)),             # norms replicated
+]
+
+
+@dataclass
+class Runtime:
+    """Mesh + axis-role bundle threaded through step builders."""
+    mesh: Mesh | None = None
+    batch_axes: tuple = ("data",)            # ('pod','data') when multi-pod
+    tp_axis: str = "model"
+    fsdp_axis: str = "data"
+    remat: bool = True
+    opt_state_dtype: str = "float32"         # bf16 for the 398B config
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.mesh.devices.shape)) if self.mesh else 1
+
+
+def make_runtime(mesh: Mesh | None, **kw) -> Runtime:
+    if mesh is not None and "pod" in mesh.axis_names:
+        kw.setdefault("batch_axes", ("pod", "data"))
+    return Runtime(mesh=mesh, **kw)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path: str, ndim: int) -> P:
+    """Resolve the PartitionSpec for a param path, right-aligned to rank."""
+    for pat, base in _PARAM_RULES:
+        if re.search(pat, path):
+            spec = tuple(base)
+            if len(spec) > ndim:                # e.g. bias folded smaller
+                spec = spec[-ndim:]
+            return P(*((None,) * (ndim - len(spec)) + spec))
+    return P(*((None,) * ndim))                 # default: replicated
+
+
+def param_shardings(rt: Runtime, params):
+    """Tree of NamedShardings (or None off-mesh) matching the param tree."""
+    if rt.mesh is None:
+        return jax.tree.map(lambda _: None, params)
+
+    def leaf(path, x):
+        return NamedSharding(rt.mesh, param_spec(_path_str(path), x.ndim))
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def constrain(rt: Runtime, x, *spec):
+    """with_sharding_constraint that is a no-op off-mesh. `spec` entries may
+    be 'dp' (expands to the batch axes), an axis name, or None. Any entry
+    whose mesh size does not divide the corresponding dim is dropped — this
+    is what lets the same model code serve batch=256 training and the
+    batch=1 long_500k cell."""
+    if rt.mesh is None:
+        return x
+    resolved = []
+    for dim, s in zip(x.shape, spec):
+        axes = rt.batch_axes if s == "dp" else s
+        if axes is None:
+            resolved.append(None)
+            continue
+        ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+        size = 1
+        for a in ax_tuple:
+            size *= rt.mesh.shape[a]
+        resolved.append(axes if (dim % size == 0 and dim >= size) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rt.mesh, P(*resolved)))
+
+
+def batch_sharding(rt: Runtime, ndim: int, *, seq_axis: int | None = None):
+    """Input batch sharding: batch over dp axes; optionally seq over model."""
+    if rt.mesh is None:
+        return None
+    spec = [None] * ndim
+    spec[0] = rt.batch_axes
+    if seq_axis is not None:
+        spec[seq_axis] = rt.tp_axis
+    return NamedSharding(rt.mesh, P(*spec))
+
+
+def replicated(rt: Runtime):
+    if rt.mesh is None:
+        return None
+    return NamedSharding(rt.mesh, P())

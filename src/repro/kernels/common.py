@@ -1,0 +1,34 @@
+"""Shared Pallas utilities: interpret-mode policy and compiler params.
+
+All kernels in this package target TPU (pl.pallas_call + BlockSpec VMEM
+tiling). On this CPU-only container they are *validated* with interpret=True,
+which executes the kernel body with jnp semantics. `should_interpret()`
+selects interpret mode automatically off-TPU so the same ops.py wrappers run
+everywhere; on a real TPU fleet the flag resolves to False and Mosaic compiles
+the kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # renamed across jax versions
+    from jax.experimental.pallas import tpu as pltpu
+    CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+except ImportError:  # pragma: no cover
+    pltpu = None
+    CompilerParams = None
+
+
+def should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def compiler_params(dimension_semantics: tuple[str, ...]):
+    """Grid dimension semantics for Mosaic ('parallel' dims may be reordered;
+    'arbitrary' dims run sequentially so VMEM scratch carries across steps).
+    Returns None in interpret mode (ignored there)."""
+    if should_interpret() or CompilerParams is None:
+        return None
+    return CompilerParams(dimension_semantics=dimension_semantics)

@@ -1,0 +1,130 @@
+"""FlashAttention Pallas TPU kernel — GQA, causal, sliding-window, softcap.
+
+The LM-substrate compute hot-spot. Online-softmax accumulation keeps the
+(bq x bkv) score tile, running max/denominator, and the output accumulator in
+VMEM across the sequential kv-block grid dimension — the same "intermediates
+never spill" discipline the paper applies to GCN stages (DESIGN.md §2).
+
+Grid: (batch, q_heads, q_blocks, kv_blocks); the kv dimension is 'arbitrary'
+(sequential) so scratch carries across it; the rest are 'parallel'. GQA is
+expressed in the K/V BlockSpec index maps (q-head -> kv-head), so no repeated
+KV materialization ever happens.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import compiler_params, should_interpret
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int | None,
+            softcap: float | None, bq: int, bkv: int, kv_blocks: int):
+    ikv = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    kv_pos = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+
+    def _block_needed():
+        if not causal and window is None:
+            return True
+        ok = True
+        if causal:  # any q >= first kv of the block
+            ok = jnp.logical_and(ok, (iq + 1) * bq - 1 >= ikv * bkv)
+        if window is not None:  # any kv within window of the last q row
+            ok = jnp.logical_and(ok, (ikv + 1) * bkv - 1 > iq * bq - window)
+        return ok
+
+    @pl.when(_block_needed())
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # [bq, d]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # [bkv, d]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)          # [bkv, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kv_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - kv_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)                         # kill -inf rows
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ikv == kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)                  # fully-masked rows -> 0
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_kv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q [B,T,H,D], k/v [B,S,KV,D] with H % KV == 0 -> [B,T,H,D]."""
+    if interpret is None:
+        interpret = should_interpret()
+    b, t, h, d = q.shape
+    _, s, kv, _ = k.shape
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    bq, bkv = min(block_q, t), min(block_kv, s)
+    assert t % bq == 0 and s % bkv == 0, (t, bq, s, bkv)
+    grid = (b, h, t // bq, s // bkv)
+    scale = d ** -0.5
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bkv=bkv, kv_blocks=s // bkv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda b_, h_, iq, ikv: (b_, iq, h_, 0)),
+            pl.BlockSpec((1, bkv, 1, d),
+                         lambda b_, h_, iq, ikv: (b_, ikv, h_ // group, 0)),
+            pl.BlockSpec((1, bkv, 1, d),
+                         lambda b_, h_, iq, ikv: (b_, ikv, h_ // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, d),
+                               lambda b_, h_, iq, ikv: (b_, iq, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # running denom l
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        compiler_params=compiler_params(
+            ("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,75 @@
+"""Fused MoE expert-FFN Pallas TPU kernel: both GEMMs + SwiGLU per capacity
+tile, hidden activations never leave VMEM.
+
+Motivation (EXPERIMENTS.md §Perf, granite hillclimb): the XLA lowering of the
+expert computation materializes ~6 dispatch-sized [E,C,D] buffers per layer
+in HBM (gather result, gate/up halves, hidden, y_buf, + backward mirrors) —
+at top-8/cf1.25 that is ~10.25x the token bytes each. This kernel is the
+SPA-GCN fusion discipline applied to MoE: one grid program handles one
+(expert, capacity-block) tile, reads x once, streams W_in/W_out tiles, and
+writes y once — HBM traffic drops from ~6 to ~2 dispatch-buffers per layer.
+
+Grid: (E, C/BC). Weights for expert e are indexed by the grid, so each
+program sees only its expert's [D, 2F] / [F, D] — VMEM per program:
+BC*D + D*2F_tile + BC*2F + F_tile*D + BC*D; with BC=128, D<=2048, F tiled to
+512 that is ~6 MB, comfortably inside the ~128 MB VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import compiler_params, should_interpret
+
+
+def _kernel(x_ref, win_ref, wout_ref, y_ref):
+    x = x_ref[0].astype(jnp.float32)                  # [BC, D]
+    win = win_ref[0].astype(jnp.float32)              # [D, 2F]
+    wout = wout_ref[0].astype(jnp.float32)            # [F, D]
+    h = jnp.dot(x, win, preferred_element_type=jnp.float32)   # [BC, 2F] VMEM
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up                        # [BC, F] VMEM only
+    y = jnp.dot(h, wout, preferred_element_type=jnp.float32)  # [BC, D]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def moe_expert_ffn(x_dispatch: jax.Array, w_in: jax.Array, w_out: jax.Array,
+                   *, block_c: int = 128,
+                   interpret: bool | None = None) -> jax.Array:
+    """x_dispatch [E, C, D], w_in [E, D, 2F], w_out [E, F, D] -> [E, C, D].
+    C must be a multiple of block_c (ops-side padding)."""
+    if interpret is None:
+        interpret = should_interpret()
+    e, c, d = x_dispatch.shape
+    f = w_out.shape[1]
+    assert c % block_c == 0, (c, block_c)
+    grid = (e, c // block_c)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda ei, ci: (ei, ci, 0)),
+            pl.BlockSpec((1, d, 2 * f), lambda ei, ci: (ei, 0, 0)),
+            pl.BlockSpec((1, f, d), lambda ei, ci: (ei, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, d), lambda ei, ci: (ei, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x_dispatch.dtype),
+        compiler_params=compiler_params(("parallel", "parallel")),
+        interpret=interpret,
+    )(x_dispatch, w_in, w_out)
+
+
+def moe_expert_ffn_ref(x_dispatch: jax.Array, w_in: jax.Array,
+                       w_out: jax.Array) -> jax.Array:
+    """Pure-jnp oracle."""
+    h = jnp.einsum("ecd,edf->ecf", x_dispatch.astype(jnp.float32),
+                   w_in.astype(jnp.float32))
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("ecf,efd->ecd", h, w_out.astype(jnp.float32))
+    return y.astype(x_dispatch.dtype)

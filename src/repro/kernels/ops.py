@@ -1,0 +1,72 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points the rest of the framework uses: they handle
+padding to block multiples, parameter plumbing from the core/ model param
+trees, and the interpret-mode fallback (DESIGN.md §2 — kernels compile with
+Mosaic on TPU, run emulated elsewhere).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import flash_attention
+from repro.kernels.fused_gcn import fused_gcn_att
+from repro.kernels.simgnn_head import simgnn_head
+from repro.kernels.wkv6 import wkv6
+
+__all__ = ["flash_attention", "wkv6", "graph_embeddings_fused",
+           "pair_scores_fused", "simgnn_pair_score_kernel"]
+
+
+def _pad_batch(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    b = x.shape[0]
+    pad = (-b) % multiple
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], 0)
+    return x, b
+
+
+def graph_embeddings_fused(params, adj_norm, feats, mask, *,
+                           block_graphs: int = 8,
+                           interpret: bool | None = None) -> jax.Array:
+    """SimGNN stages 1-2 via the fused Pallas kernel. Pads B to a block
+    multiple (pad graphs have all-zero masks -> zero embeddings)."""
+    adj_norm, b = _pad_batch(adj_norm, block_graphs)
+    feats, _ = _pad_batch(feats, block_graphs)
+    mask, _ = _pad_batch(mask, block_graphs)
+    out = fused_gcn_att(adj_norm, feats, mask, params["gcn"],
+                        params["att"]["w"], block_graphs=block_graphs,
+                        interpret=interpret)
+    return out[:b]
+
+
+def pair_scores_fused(params, hg1, hg2, *, block_pairs: int = 128,
+                      interpret: bool | None = None) -> jax.Array:
+    """SimGNN stages 3-4 via the fused head kernel."""
+    hg1, b = _pad_batch(hg1, block_pairs)
+    hg2, _ = _pad_batch(hg2, block_pairs)
+    out = simgnn_head(hg1, hg2, params["ntn"], params["fcn"],
+                      block_pairs=block_pairs, interpret=interpret)
+    return out[:b]
+
+
+def simgnn_pair_score_kernel(params, adj1, feats1, mask1, adj2, feats2, mask2,
+                             *, block_graphs: int = 8,
+                             interpret: bool | None = None) -> jax.Array:
+    """Full SimGNN pipeline on the kernel path: both graphs share one fused
+    GCN+Att invocation (batch 2B), then the fused NTN+FCN head. Expects *raw*
+    adjacency; normalization happens here (parity with core.simgnn)."""
+    from repro.core.gcn import normalized_adjacency
+
+    adj = jnp.concatenate([adj1, adj2], axis=0)
+    feats = jnp.concatenate([feats1, feats2], axis=0)
+    mask = jnp.concatenate([mask1, mask2], axis=0)
+    a_norm = normalized_adjacency(adj, mask)
+    hg = graph_embeddings_fused(params, a_norm, feats, mask,
+                                block_graphs=block_graphs, interpret=interpret)
+    hg1, hg2 = jnp.split(hg, 2, axis=0)
+    bp = max(8, min(128, hg1.shape[0]))
+    return pair_scores_fused(params, hg1, hg2, block_pairs=bp,
+                             interpret=interpret)

@@ -1,0 +1,79 @@
+"""RWKV-6 (Finch) WKV linear-recurrence Pallas TPU kernel.
+
+Per head with key dim K and value dim V, data-dependent per-channel decay:
+
+    o_t = r_t^T S_{t-1}  +  (r_t . (u * k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+The [K, V] state matrix stays in VMEM scratch across the sequential time-block
+grid dimension — one HBM read per input element, one write per output element
+(the SPA-GCN "read once" rule applied to a recurrence). Grid:
+(batch, heads, time_blocks) with time 'arbitrary' (sequential).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import compiler_params, should_interpret
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *, bt: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)     # [bt, K]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)     # [bt, V]
+    w = w_ref[0, :, 0, :].astype(jnp.float32)     # [bt, K] decay in (0,1)
+    u = u_ref[0, :].astype(jnp.float32)           # [K] bonus for current token
+
+    def step(t, carry):
+        s, ys = carry
+        rt, kt, vt, wt = r[t], k[t], v[t], w[t]
+        o = rt @ s + jnp.sum(rt * u * kt) * vt     # [V]
+        s = wt[:, None] * s + kt[:, None] * vt[None, :]
+        return s, ys.at[t].set(o)
+
+    s0 = state_ref[...]
+    ys0 = jnp.zeros((bt, v.shape[-1]), jnp.float32)
+    s_final, ys = jax.lax.fori_loop(0, bt, step, (s0, ys0))
+    state_ref[...] = s_final
+    o_ref[0, :, 0, :] = ys.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, block_t: int = 128,
+         interpret: bool | None = None) -> jax.Array:
+    """r/k/w [B,T,H,K], v [B,T,H,V], u [H,K] -> [B,T,H,V]."""
+    if interpret is None:
+        interpret = should_interpret()
+    b, t, h, kd = r.shape
+    vd = v.shape[-1]
+    bt = min(block_t, t)
+    assert t % bt == 0, (t, bt)
+    grid = (b, h, t // bt)
+
+    def seq(d):
+        return pl.BlockSpec((1, bt, 1, d), lambda b_, h_, it: (b_, it, h_, 0))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bt=bt),
+        grid=grid,
+        in_specs=[seq(kd), seq(kd), seq(vd), seq(kd),
+                  pl.BlockSpec((1, kd), lambda b_, h_, it: (h_, 0))],
+        out_specs=seq(vd),
+        out_shape=jax.ShapeDtypeStruct((b, t, h, vd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((kd, vd), jnp.float32)],
+        compiler_params=compiler_params(("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u)

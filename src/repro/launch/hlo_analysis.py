@@ -1,0 +1,355 @@
+"""Post-compile HLO analysis: loop-corrected FLOPs, HBM traffic estimate, and
+collective-traffic accounting.
+
+Why this exists (EXPERIMENTS.md §Dry-run caveats):
+  * `compiled.cost_analysis()` counts each `while` body ONCE — verified
+    empirically (flops identical for 2/4/8-layer scanned models). Every layer
+    stack here is a lax.scan, so raw cost_analysis under-counts by ~n_groups.
+  * collective bytes are not in cost_analysis at all.
+
+So we parse `compiled.as_text()` (optimized HLO):
+  1. split into computations; build a per-computation symbol table
+     (every op line declares its result type, so operand types resolve by
+     name lookup);
+  2. count dot FLOPs exactly (2 x result-elements x contracted-dims), and
+     fusion-boundary bytes as an HBM-traffic estimate;
+  3. build the call graph; `while` bodies multiply by the trip count parsed
+     from the loop condition's compare constant; fusion-internal computations
+     (calls= / reduce to_apply) are excluded from memory accounting;
+  4. collectives: operand/result/wire bytes from result type + replica-group
+     factor (ring algorithm estimates).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+
+def _dims(type_str: str) -> tuple[int, list[int]]:
+    """(bytes_per_elem, dims) for the first array shape in a type string."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0, []
+    dt, dims = m.group(1), m.group(2)
+    d = [int(x) for x in dims.split(",")] if dims else []
+    return _DTYPE_BYTES[dt], d
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^()]*\)|[\w\[\],{}\/]+))\s+"
+    r"([\w\-]+)\(([^\n]*)$")
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$",
+                     stripped)
+        if m and not stripped.startswith("ROOT") and "=" not in \
+                stripped.split("(", 1)[0]:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and stripped:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _entry_name(hlo: str) -> str | None:
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    return m.group(1) if m else None
+
+
+_MATERIAL_OPS = ("fusion", "dot", "convolution", "copy", "concatenate",
+                 "reduce", "reduce-window", "sort", "gather", "slice",
+                 "dynamic-slice", "dynamic-update-slice", "scatter",
+                 "select-and-scatter", "transpose", "pad", "cholesky",
+                 "triangular-solve")
+
+
+class _Comp:
+    __slots__ = ("name", "symbols", "dot_flops", "mem_records", "coll",
+                 "control_edges", "fusion_edges", "coll_counts")
+
+    def __init__(self, name):
+        self.name = name
+        self.symbols: dict[str, str] = {}        # op name -> result type str
+        self.dot_flops = 0
+        self.mem_records: list[tuple[int, int, bool]] = []  # (bytes, lead, material)
+        self.coll = [0, 0, 0]                     # operand, result, wire
+        self.coll_counts: dict[str, int] = defaultdict(int)
+        self.control_edges: list[tuple[str, int]] = []   # (callee, trip)
+        self.fusion_edges: list[str] = []
+
+
+def _parse_comp(name: str, lines: list[str]) -> _Comp:
+    c = _Comp(name)
+    # pass 1: symbol table
+    parsed = []
+    for ln in lines:
+        m = _OP_RE.match(ln)
+        if not m:
+            continue
+        op_name, rtype, opcode, rest = m.groups()
+        c.symbols[op_name] = rtype
+        parsed.append((op_name, rtype, opcode, rest, ln))
+    # pass 2: semantics
+    for op_name, rtype, opcode, rest, ln in parsed:
+        operands = re.findall(r"%([\w\.\-]+)", rest.split(")", 1)[0])
+
+        if opcode == "dot":
+            _, rdims = _dims(rtype)
+            lhs_t = c.symbols.get(operands[0], "") if operands else ""
+            _, ldims = _dims(lhs_t)
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+            contracted = 1
+            if cm and ldims:
+                for d in cm.group(1).split(","):
+                    if d:
+                        contracted *= ldims[int(d)]
+            relems = 1
+            for d in rdims:
+                relems *= d
+            c.dot_flops += 2 * relems * contracted
+        elif opcode == "convolution":
+            _, rdims = _dims(rtype)
+            kern_t = c.symbols.get(operands[1], "") if len(operands) > 1 else ""
+            _, kdims = _dims(kern_t)
+            relems = 1
+            for d in rdims:
+                relems *= d
+            kelems = 1
+            for d in kdims:
+                kelems *= d
+            # 2 * out_elems * (kernel_elems / out_channels)
+            out_ch = rdims[-1] if rdims else 1
+            c.dot_flops += 2 * relems * max(1, kelems // max(1, out_ch))
+
+        base = opcode
+        for suf in ("-start", "-done"):
+            if base.endswith(suf):
+                base = base[: -len(suf)]
+        if base in _COLLECTIVES and not opcode.endswith("-done"):
+            rb = _shape_bytes(rtype)
+            g = _group_size(ln)
+            if base == "all-gather":
+                ob, wire = rb // max(g, 1), rb * (g - 1) // max(g, 1)
+            elif base == "reduce-scatter":
+                ob = rb * g
+                wire = ob * (g - 1) // max(g, 1)
+            elif base == "all-reduce":
+                ob, wire = rb, 2 * rb * (g - 1) // max(g, 1)
+            else:
+                ob, wire = rb, rb * (g - 1) // max(g, 1)
+            c.coll[0] += ob
+            c.coll[1] += rb
+            c.coll[2] += wire
+            c.coll_counts[base] += 1
+
+        if opcode == "while":
+            wm = re.search(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)", ln)
+            if wm:
+                c.control_edges.append(("COND:" + wm.group(1),
+                                        "BODY:" + wm.group(2)))
+        elif opcode == "conditional":
+            for cm2 in re.finditer(r"(?:branch_computations=\{|true_computation=|false_computation=)%?([\w\.\-{}, %]+)", ln):
+                for callee in re.findall(r"%?([\w\.\-]+)", cm2.group(1)):
+                    c.control_edges.append((None, "CALL:" + callee))
+        elif opcode == "call":
+            cm2 = re.search(r"to_apply=%?([\w\.\-]+)", ln)
+            if cm2:
+                c.control_edges.append((None, "CALL:" + cm2.group(1)))
+        elif opcode == "fusion":
+            cm2 = re.search(r"calls=%?([\w\.\-]+)", ln)
+            if cm2:
+                c.fusion_edges.append(cm2.group(1))
+        elif opcode in ("reduce", "reduce-window", "scatter", "sort", "map",
+                        "select-and-scatter", "all-reduce", "reduce-scatter"):
+            cm2 = re.search(r"to_apply=%?([\w\.\-]+)", ln)
+            if cm2:
+                c.fusion_edges.append(cm2.group(1))
+
+        # HBM-traffic model: every materialized intermediate is written once
+        # and read ~once -> 2 x result bytes per executed op. This avoids the
+        # two failure modes measured on earlier estimators (EXPERIMENTS.md
+        # §Dry-run caveats): (a) billing the full operand of a dynamic-slice
+        # inside a T=4096 scan (~1000x inflation on Jamba's recurrence);
+        # (b) multi-counting the same loop-carried buffer as an operand of
+        # many fusions (~15x inflation on granite). Exceptions: in-place
+        # update ops bill the update region, pure aliasing ops bill nothing.
+        if opcode in ("dynamic-update-slice", "scatter", "select-and-scatter"):
+            upd_idx = 2 if opcode == "scatter" else 1
+            upd = (c.symbols.get(operands[upd_idx], "")
+                   if len(operands) > upd_idx else "")
+            c.mem_records.append(
+                (2 * (_shape_bytes(upd) or _shape_bytes(rtype) // 4), 0, True))
+        elif opcode not in ("parameter", "tuple", "get-tuple-element",
+                            "bitcast", "constant", "while", "conditional",
+                            "call", "iota", "after-all", "reshape",
+                            "partition-id", "replica-id"):
+            _, rdims = _dims(rtype)
+            lead = rdims[0] if rdims else 0
+            # standalone elementwise ops (convert/add/multiply/...) would
+            # fuse into neighbours on TPU: they count toward the upper
+            # bound but not the fusion-optimistic lower bound.
+            c.mem_records.append((2 * _shape_bytes(rtype), lead,
+                                  opcode in _MATERIAL_OPS))
+    return c
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps_raw = _split_computations(hlo)
+    comps = {n: _parse_comp(n, ls) for n, ls in comps_raw.items()}
+    entry = _entry_name(hlo)
+
+    # trip counts: constant compared in the condition computation
+    def trip_of(cond_name: str) -> int:
+        lines = comps_raw.get(cond_name, [])
+        best = 1
+        for ln in lines:
+            for m in re.finditer(r"constant\((\d+)\)", ln):
+                best = max(best, int(m.group(1)))
+            # bound may be folded into a called compare fusion
+            cm = re.search(r"calls=%?([\w\.\-]+)", ln)
+            if cm:
+                for ln2 in comps_raw.get(cm.group(1), []):
+                    for m in re.finditer(r"constant\((\d+)\)", ln2):
+                        best = max(best, int(m.group(1)))
+        return best
+
+    # propagate execution multipliers through control edges only; remember
+    # each while body's own trip count for scan-accumulator detection
+    mults: dict[str, int] = defaultdict(int)
+    own_trip: dict[str, int] = {}
+    fusion_reached: dict[str, int] = defaultdict(int)
+    if entry:
+        mults[entry] = 1
+    work = [entry] if entry else []
+    for _ in range(10_000):
+        if not work:
+            break
+        cur = work.pop()
+        comp = comps.get(cur)
+        if comp is None:
+            continue
+        for cond, body in comp.control_edges:
+            if body.startswith("BODY:"):
+                tc = trip_of(cond[5:]) if cond else 1
+                callee = body[5:]
+                own_trip[callee] = max(own_trip.get(callee, 1), tc)
+            else:
+                tc = 1
+                callee = body[5:]
+            before = mults[callee]
+            mults[callee] += mults[cur] * tc
+            if mults[callee] != before:
+                work.append(callee)
+        for callee in comp.fusion_edges:
+            fusion_reached[callee] += mults[cur]
+
+    flops = 0
+    mem = 0
+    mem_lb = 0
+    coll = [0, 0, 0]
+    counts: dict[str, int] = defaultdict(int)
+    static_counts: dict[str, int] = defaultdict(int)
+    for name, comp in comps.items():
+        mult = mults.get(name, 0)
+        if mult == 0 and name not in fusion_reached and (
+                comp.dot_flops or any(comp.coll)):
+            mult = 1          # e.g. entry detection failure: count once
+        if name in fusion_reached and mults.get(name, 0) == 0:
+            # fusion-internal computation: dots still count (scaled by the
+            # caller's multiplier), memory does not (inside the fusion)
+            fmult = fusion_reached[name]
+            flops += comp.dot_flops * fmult
+            continue
+        flops += comp.dot_flops * mult
+        # scan-accumulator heuristic: a result whose leading dim equals the
+        # enclosing loop's trip count is an in-place per-step update of a
+        # [T, ...] buffer (the scan transpose/ys pattern) — bill the
+        # per-step slice, not the whole buffer every iteration (measured
+        # ~1000x inflation on the Jamba recurrence otherwise).
+        trip = own_trip.get(name, 1)
+        for bytes_, lead, material in comp.mem_records:
+            eff = bytes_ // trip if (trip > 1 and lead == trip) else bytes_
+            mem += mult * eff
+            if material:
+                mem_lb += mult * eff
+        coll[0] += comp.coll[0] * mult
+        coll[1] += comp.coll[1] * mult
+        coll[2] += comp.coll[2] * mult
+        for op, cnt in comp.coll_counts.items():
+            counts[op] += cnt * mult
+            static_counts[op] += cnt
+    return {
+        "dot_flops": int(flops),
+        "mem_bytes_est": int(mem),
+        "mem_bytes_fused_lb": int(mem_lb),
+        "collectives": {
+            "bytes_operand": int(coll[0]),
+            "bytes_result": int(coll[1]),
+            "bytes_wire": int(coll[2]),
+            "counts": dict(counts),
+            "static_counts": dict(static_counts),
+        },
+    }
+
+
+def collective_stats(hlo: str) -> dict:
+    """Back-compat wrapper returning just the collective block."""
+    return analyze_hlo(hlo)["collectives"]
+
+
+def while_trip_counts(hlo: str) -> dict[str, int]:
+    comps_raw = _split_computations(hlo)
+    out = {}
+    for name, lines in comps_raw.items():
+        for ln in lines:
+            wm = re.search(r"while\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)", ln)
+            if wm:
+                cond = wm.group(1)
+                best = 1
+                for ln2 in comps_raw.get(cond, []):
+                    for m in re.finditer(r"constant\((\d+)\)", ln2):
+                        best = max(best, int(m.group(1)))
+                out[wm.group(2)] = best
+    return out

@@ -1,0 +1,128 @@
+"""input_specs + sharding specs for every (arch x shape x mesh) cell.
+
+`input_specs(arch, shape)` returns ShapeDtypeStruct stand-ins for every model
+input — weak-type-correct, shardable, no device allocation (assignment spec
+§2). `cell_shardings` pairs them with NamedShardings for the mesh.
+
+Sharding policy (DESIGN.md §6):
+  tokens/frames/embeds  : batch over (pod?, data); seq unsharded at input
+  attn KV caches        : batch over dp, cache-seq over model (SP decode);
+                          for long_500k (batch=1) cache-seq over (data, model)
+  mamba/rwkv states     : batch over dp, inner dim over model
+  params / opt state    : name-based rules in distributed/sharding.py
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed.sharding import Runtime, make_runtime, param_spec, _path_str
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+
+def dec_len(cfg: ModelConfig, seq_len: int) -> int:
+    return max(128, seq_len // cfg.dec_seq_divisor) if cfg.is_enc_dec else seq_len
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """ShapeDtypeStructs for the step function's *data* arguments (params and
+    caches have their own spec builders below)."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    b, s = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    d = cfg.d_model
+
+    if kind in ("train", "prefill"):
+        if cfg.is_enc_dec:
+            return {"frames": jax.ShapeDtypeStruct((b, s, d), BF16),
+                    "tokens": jax.ShapeDtypeStruct((b, dec_len(cfg, s)), I32)}
+        if cfg.frontend == "vision":
+            p = cfg.frontend_len
+            return {"tokens": jax.ShapeDtypeStruct((b, s - p), I32),
+                    "embeds": jax.ShapeDtypeStruct((b, p, d), BF16)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), I32)}
+
+    assert kind == "decode"
+    out = {"token": jax.ShapeDtypeStruct((b, 1), I32),
+           "cache_pos": jax.ShapeDtypeStruct((b,), I32)}
+    if cfg.is_enc_dec:
+        out["enc_out"] = jax.ShapeDtypeStruct((b, s, d), BF16)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: lm.init_cache(cfg, batch, cache_len))
+
+
+# ------------------------------------------------------------- shardings
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def data_shardings(rt: Runtime, specs: dict, *, kind: str):
+    """NamedShardings for the input_specs dict."""
+    mesh = rt.mesh
+    dp = rt.batch_axes if len(rt.batch_axes) > 1 else rt.batch_axes[0]
+    out = {}
+    for k, v in specs.items():
+        if k == "cache_pos":
+            out[k] = _ns(mesh, dp)
+        elif v.ndim == 3:                       # frames / embeds [B,S,D]
+            out[k] = _ns(mesh, dp, None, None)
+        else:                                    # tokens [B,S] / token [B,1]
+            out[k] = _ns(mesh, dp, None)
+        if v.shape[0] == 1:                      # long_500k: batch unshardable
+            out[k] = _ns(mesh, *((None,) * v.ndim))
+    return out
+
+
+def cache_shardings(rt: Runtime, cfg: ModelConfig, caches, *, batch: int):
+    """Sharding tree matching init_cache structure. Leaves [G, B, ...]."""
+    mesh = rt.mesh
+    dp = rt.batch_axes if len(rt.batch_axes) > 1 else rt.batch_axes[0]
+    seq_ax = "model" if batch > 1 else ("data", "model")
+    b_ax = dp if batch > 1 else None
+
+    def leaf(path, x):
+        name = _path_str(path)
+        nd = x.ndim
+        if name.endswith("/k") or name.endswith("/v"):
+            return _ns(mesh, None, b_ax, seq_ax, None, None)
+        if name.endswith("_scale"):                # int8 KV scales [G,B,W,KV]
+            return _ns(mesh, None, b_ax, seq_ax, None)
+        if name.endswith("/pos"):
+            return _ns(mesh, None, b_ax, seq_ax)
+        if name.endswith("ssm"):                 # [G,B,Din,N]
+            return _ns(mesh, None, b_ax, "model", None)
+        if name.endswith("conv"):                # [G,B,K-1,Din]
+            return _ns(mesh, None, b_ax, None, "model")
+        if name.endswith("wkv"):                 # [G,B,H,K,V]
+            return _ns(mesh, None, b_ax, "model", None, None)
+        if "shift" in name:                      # [G,B,1,D]
+            return _ns(mesh, None, b_ax, None, "model")
+        return _ns(mesh, *((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf, caches)
+
+
+def param_shardings_abstract(rt: Runtime, params_abstract):
+    def leaf(path, x):
+        return NamedSharding(rt.mesh, param_spec(_path_str(path), x.ndim))
+    return jax.tree_util.tree_map_with_path(leaf, params_abstract)
+
+
+def opt_state_shardings(rt: Runtime, params_shardings, step_sharding=None):
+    """m/v mirror the param shardings; step scalar replicated."""
+    from repro.train.optimizer import AdamWState
+    rep = NamedSharding(rt.mesh, P())
+    return AdamWState(step=rep, m=params_shardings, v=params_shardings)

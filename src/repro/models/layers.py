@@ -1,0 +1,232 @@
+"""Shared LM layers: norms, RoPE, attention (train/prefill/decode), MLP.
+
+Attention has two exact paths:
+  * dense — score matrix materialized; used for short sequences and for
+    single-token decode against a KV cache (scores are [B,H,1,S] — tiny);
+  * chunked — lax.scan over KV blocks with online softmax (FlashAttention
+    recurrence expressed in XLA); used for long prefill/train so the [T,S]
+    score matrix never materializes. `kernels/flash_attn.py` is the Pallas
+    realization of the same recurrence for real-TPU runs.
+
+Everything is mask-exact w.r.t. causal, sliding-window and softcap semantics
+shared with kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+CHUNK_THRESHOLD = 2048
+KV_CHUNK = 1024
+
+
+def rmsnorm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * rms * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x [B, T, H, hd], positions [B, T] -> rotated x."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # [B,T,half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def swiglu_mlp(p, x: Array) -> Array:
+    gate_up = jnp.einsum("btd,df->btf", x, p["w_in"])
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    return jnp.einsum("btf,fd->btd", jax.nn.silu(gate) * up, p["w_out"])
+
+
+# ---------------------------------------------------------------- attention
+
+def _qkv(p, x: Array, cfg, positions: Array):
+    b, t, _ = x.shape
+    q = jnp.einsum("btd,dh->bth", x, p["wq"])
+    k = jnp.einsum("btd,dh->bth", x, p["wk"])
+    v = jnp.einsum("btd,dh->bth", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["wq_b"], k + p["wk_b"], v + p["wv_b"]
+    q = q.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.rope_theta is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _scores(q: Array, k: Array, cfg) -> Array:
+    """[B,T,H,hd] x [B,S,KV,hd] -> [B,H,T,S] with GQA via reshape."""
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, t, kv, g, hd)
+    sc = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) * (hd ** -0.5)
+    sc = sc.reshape(b, kv * g, t, s)
+    if cfg.attn_softcap is not None:
+        sc = cfg.attn_softcap * jnp.tanh(sc / cfg.attn_softcap)
+    return sc
+
+
+def _apply_probs(p: Array, v: Array) -> Array:
+    """[B,H,T,S] x [B,S,KV,hd] -> [B,T,H,hd]."""
+    b, h, t, s = p.shape
+    kv = v.shape[2]
+    g = h // kv
+    pg = p.reshape(b, kv, g, t, s)
+    out = jnp.einsum("bkgts,bskd->btkgd", pg, v.astype(jnp.float32))
+    return out.reshape(b, t, h, v.shape[-1])
+
+
+def _mask(q_pos: Array, kv_pos: Array, *, causal: bool, window: int | None,
+          kv_len_mask: Array | None = None) -> Array:
+    """q_pos [B,T], kv_pos [B,S] -> bool [B,1,T,S]."""
+    qp = q_pos[:, :, None]
+    kp = kv_pos[:, None, :]
+    m = jnp.ones(qp.shape[:1] + (qp.shape[1], kp.shape[2]), bool)
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= (qp - kp) < window
+    if kv_len_mask is not None:
+        m &= kv_len_mask[:, None, :]
+    return m[:, None, :, :]
+
+
+def attention_core(q, k, v, cfg, mask) -> Array:
+    """Exact masked attention, dense scores. mask [B,1,T,S] bool."""
+    sc = _scores(q, k, cfg)
+    sc = jnp.where(mask, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    return _apply_probs(p, v).astype(q.dtype)
+
+
+def chunked_attention_core(q, k, v, cfg, *, q_pos, kv_pos, causal, window) -> Array:
+    """Online-softmax over KV chunks (flash recurrence in XLA)."""
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    n_chunks = -(-s // KV_CHUNK)
+    pad = n_chunks * KV_CHUNK - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    kc = k.reshape(b, n_chunks, KV_CHUNK, *k.shape[2:]).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, KV_CHUNK, *v.shape[2:]).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(b, n_chunks, KV_CHUNK).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_i, v_i, p_i = xs
+        sc = _scores(q, k_i, cfg)                                   # [B,H,T,C]
+        msk = _mask(q_pos, p_i, causal=causal, window=window)
+        sc = jnp.where(msk, sc, NEG_INF)
+        m_cur = jnp.max(sc, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        pr = jnp.exp(sc - m_new[..., None])
+        pr = jnp.where(msk, pr, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(pr, axis=-1)
+        acc = acc * alpha[..., None] + _apply_probs(pr, v_i).transpose(0, 2, 1, 3)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, t), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, t), jnp.float32)
+    a0 = jnp.zeros((b, h, t, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)                # [B,T,H,hd]
+
+
+def self_attention(p, x: Array, cfg, *, positions: Array, local: bool,
+                   cache=None, cache_pos=None):
+    """Self-attention. Train/prefill (cache=None): returns (y, (k, v)) so the
+    caller can build a KV cache. Decode (cache given): x is [B,1,D]; the cache
+    is a *ring buffer* {"k","v" [B,W,KV,hd], "pos" [B,W] int32 (-1 = empty)} —
+    for sliding-window layers W == window, so a 500k-context Danube/Gemma-2
+    local layer holds a constant-size cache (DESIGN.md §6, SP/serving)."""
+    b, t, _ = x.shape
+    window = cfg.sliding_window if local else None
+    q, k, v = _qkv(p, x, cfg, positions)
+
+    if cache is None:
+        if t >= CHUNK_THRESHOLD:
+            out = chunked_attention_core(q, k, v, cfg, q_pos=positions,
+                                         kv_pos=positions, causal=True,
+                                         window=window)
+        else:
+            mask = _mask(positions, positions, causal=True, window=window)
+            out = attention_core(q, k, v, cfg, mask)
+        y = jnp.einsum("bthd,hdD->btD", out,
+                       p["wo"].reshape(cfg.n_heads, cfg.head_dim, -1))
+        return y, (k, v)
+
+    # decode: ring-buffer write at cache_pos % W, attend over stored positions
+    k_cache, v_cache, pos_buf = cache["k"], cache["v"], cache["pos"]
+    w_alloc = k_cache.shape[1]
+    slot = cache_pos % w_alloc                                      # [B]
+    onehot = (jnp.arange(w_alloc)[None, :] == slot[:, None])        # [B, W]
+    quant = "k_scale" in cache
+    if quant:     # int8 KV (per token x head absmax scale) — §Perf cell C
+        k_q, k_s = quantize_kv(k)
+        v_q, v_s = quantize_kv(v)
+        k_cache = jnp.where(onehot[:, :, None, None], k_q, k_cache)
+        v_cache = jnp.where(onehot[:, :, None, None], v_q, v_cache)
+        k_scale = jnp.where(onehot[:, :, None], k_s, cache["k_scale"])
+        v_scale = jnp.where(onehot[:, :, None], v_s, cache["v_scale"])
+        k_use = k_cache.astype(jnp.float32) * k_scale[..., None]
+        v_use = v_cache.astype(jnp.float32) * v_scale[..., None]
+    else:
+        k_cache = jnp.where(onehot[:, :, None, None], k.astype(k_cache.dtype),
+                            k_cache)
+        v_cache = jnp.where(onehot[:, :, None, None], v.astype(v_cache.dtype),
+                            v_cache)
+        k_use, v_use = k_cache, v_cache
+    pos_buf = jnp.where(onehot, cache_pos[:, None], pos_buf)
+    valid = (pos_buf >= 0) & (pos_buf <= cache_pos[:, None])
+    mask = _mask(positions, pos_buf, causal=False, window=window,
+                 kv_len_mask=valid)
+    out = attention_core(q, k_use, v_use, cfg, mask)
+    y = jnp.einsum("bthd,hdD->btD", out,
+                   p["wo"].reshape(cfg.n_heads, cfg.head_dim, -1))
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos_buf}
+    if quant:
+        new_cache["k_scale"] = k_scale
+        new_cache["v_scale"] = v_scale
+    return y, new_cache
+
+
+def quantize_kv(x: Array):
+    """[..., hd] -> (int8 values, per-row absmax/127 scale [...])."""
+    s = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def cross_attention(p, x: Array, enc_out: Array, cfg, enc_mask: Array | None = None):
+    """Decoder cross-attention (seamless). x [B,T,D], enc_out [B,S,D]."""
+    b, t, _ = x.shape
+    s = enc_out.shape[1]
+    q = jnp.einsum("btd,dh->bth", x, p["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    ones_q = jnp.zeros((b, t), jnp.int32)
+    kv_pos = jnp.zeros((b, s), jnp.int32)
+    mask = _mask(ones_q, kv_pos, causal=False, window=None, kv_len_mask=enc_mask)
+    out = attention_core(q, k, v, cfg, mask)
+    return jnp.einsum("bthd,hdD->btD", out,
+                      p["wo"].reshape(cfg.n_heads, cfg.head_dim, -1))

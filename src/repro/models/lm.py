@@ -1,0 +1,305 @@
+"""LM assembly: block dispatch, scan-over-groups, forward / prefill / decode.
+
+The layer stack is applied with `lax.scan` over repeating groups (HLO stays
+compact: Jamba-72L lowers as 9 steps of an 8-layer group). Training wraps the
+group body in `jax.checkpoint` so only per-group carries are saved — the
+standard remat-over-scan memory policy at 1000-node scale.
+
+Caches are pytrees mirroring the group structure, leaves stacked [G, ...]:
+  attn  -> {"k","v" [G,B,W,KV,hd], "pos" [G,B,W]}   (W = window for local)
+  mamba -> {"conv" [G,B,K-1,Din], "ssm" [G,B,Din,N]}
+  rwkv  -> {"shift_t","shift_c" [G,B,1,D], "wkv" [G,B,H,K,V]}
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Runtime, constrain
+from repro.models import layers, rwkv6
+from repro.models.config import ModelConfig
+from repro.models.mamba import mamba_block
+from repro.models.moe import moe_ffn
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------------ blocks
+
+def _ffn_part(p, h: Array, cfg, is_moe: bool, kind: str, cmix_state=None,
+              rt=None):
+    """Returns (y, aux_loss, cmix_shift_out)."""
+    if kind == "rwkv":
+        y, last = rwkv6.channel_mix(p["cmix"], h, shift_state=cmix_state)
+        return y, 0.0, last
+    if is_moe:
+        y, aux = moe_ffn(p["moe"], h, cfg, rt)
+        return y, aux, None
+    return layers.swiglu_mlp(p["mlp"], h), 0.0, None
+
+
+def apply_block(p, x: Array, cfg, kind: str, is_moe: bool, *,
+                positions: Array, cache=None, cache_pos=None, enc_out=None,
+                causal: bool = True, rt=None):
+    """One layer: (mixer + residual) then (ffn + residual). Returns
+    (x, new_cache, aux_loss)."""
+    new_cache: dict[str, Any] = {}
+    h = layers.rmsnorm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if kind in ("attn", "attn_local"):
+        if causal:
+            y, c = layers.self_attention(
+                p["attn"], h, cfg, positions=positions,
+                local=(kind == "attn_local"),
+                cache=None if cache is None else cache["attn"],
+                cache_pos=cache_pos)
+            if cache is not None:
+                new_cache["attn"] = c
+            else:
+                new_cache["attn_kv"] = c       # (k, v) for prefill cache build
+        else:                                   # encoder: bidirectional
+            mask = layers._mask(positions, positions, causal=False, window=None)
+            q, k, v = layers._qkv(p["attn"], h, cfg, positions)
+            out = layers.attention_core(q, k, v, cfg, mask)
+            y = jnp.einsum("bthd,hdD->btD", out,
+                           p["attn"]["wo"].reshape(cfg.n_heads, cfg.head_dim, -1))
+    elif kind == "mamba":
+        y, c = mamba_block(p["mamba"], h, cfg,
+                           state=None if cache is None else cache["mamba"])
+        new_cache["mamba"] = c
+    elif kind == "rwkv":
+        st = cache["rwkv"] if cache is not None else None
+        y, shift_t, wkv = rwkv6.time_mix(
+            p["rwkv"], h, cfg,
+            shift_state=None if st is None else st["shift_t"],
+            wkv_state=None if st is None else st["wkv"])
+        new_cache["rwkv"] = {"shift_t": shift_t, "wkv": wkv}
+    else:
+        raise ValueError(kind)
+    if cfg.post_block_norm:
+        y = layers.rmsnorm(y, p["post_ln1"]["scale"], cfg.norm_eps)
+    x = x + y
+
+    if enc_out is not None:                     # decoder cross-attention
+        h = layers.rmsnorm(x, p["ln_x"]["scale"], cfg.norm_eps)
+        x = x + layers.cross_attention(p["xattn"], h, enc_out, cfg)
+
+    h = layers.rmsnorm(x, p["ln2"]["scale"], cfg.norm_eps)
+    cm_st = (cache["rwkv"]["shift_c"] if (kind == "rwkv" and cache is not None)
+             else None)
+    y, aux, cm_last = _ffn_part(p, h, cfg, is_moe, kind, cmix_state=cm_st,
+                                rt=rt)
+    if kind == "rwkv":
+        new_cache["rwkv"]["shift_c"] = cm_last
+    if cfg.post_block_norm:
+        y = layers.rmsnorm(y, p["post_ln2"]["scale"], cfg.norm_eps)
+    return x + y, new_cache, aux
+
+
+# ------------------------------------------------------------- group scan
+
+def _scan_groups(params, cfg, rt: Runtime, x: Array, *, positions,
+                 caches=None, cache_pos=None, enc_out=None, causal=True,
+                 remat=False, groups_key="groups", kinds=None, moes=None):
+    kinds = kinds or cfg.layer_kinds()
+    moes = moes if moes is not None else cfg.layer_is_moe()
+    # Megatron-style sequence sharding between layers pays off only for pure
+    # attention stacks; MoE dispatch and SSM/RWKV time-scans index the whole
+    # sequence locally, and a seq-sharded residual forces the partitioner
+    # into masked-gather all-reduces of the [E,C,D] dispatch buffers
+    # (observed: 2.5 TB/device/step on granite before this policy;
+    # EXPERIMENTS.md §Perf).
+    seq_shard = (x.shape[1] >= rt.n_devices
+                 and not cfg.no_seq_shard
+                 and not cfg.moe_period
+                 and all(k in ("attn", "attn_local") for k in kinds))
+
+    def body(carry, xs):
+        x = carry
+        grp, cache_grp = xs
+        new_caches = []
+        aux_total = 0.0
+        for j, kind in enumerate(kinds):
+            x, nc, aux = apply_block(
+                grp[j], x, cfg, kind, moes[j], positions=positions,
+                cache=None if cache_grp is None else cache_grp[j],
+                cache_pos=cache_pos, enc_out=enc_out, causal=causal, rt=rt)
+            new_caches.append(nc)
+            aux_total = aux_total + aux
+        if seq_shard:
+            x = constrain(rt, x, "dp", rt.tp_axis, None)
+        else:
+            x = constrain(rt, x, "dp", None, None)
+        return x, (new_caches, aux_total)
+
+    if remat:
+        body = jax.checkpoint(body)
+    if caches is None:
+        x, (stacks, auxes) = jax.lax.scan(
+            lambda c, g: body(c, (g, None)), x, params[groups_key])
+    else:
+        x, (stacks, auxes) = jax.lax.scan(body, x, (params[groups_key], caches))
+    return x, stacks, jnp.sum(auxes)
+
+
+# ---------------------------------------------------------------- forward
+
+def embed_tokens(params, cfg, tokens: Array) -> Array:
+    return jnp.take(params["embed"]["table"], tokens, axis=0)
+
+
+def logits_from_hidden(params, cfg, x: Array) -> Array:
+    x = layers.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", x, params["embed"]["table"])
+    else:
+        logits = jnp.einsum("btd,dv->btv", x, params["lm_head"]["w"])
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    if cfg.vocab_padded != cfg.vocab_size:   # mask Megatron-style pad ids
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e9, logits)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, rt: Runtime, tokens: Array, *,
+            embeds: Array | None = None, remat: bool = False):
+    """Training/scoring forward. tokens [B,S_tok]; embeds [B,P,D] prepended
+    (VLM patches / audio frames). Returns (logits [B,S,V], aux_loss)."""
+    x = embed_tokens(params, cfg, tokens)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constrain(rt, x, "dp", None, None)
+    if cfg.is_enc_dec:
+        raise ValueError("use encdec.forward_encdec for enc-dec models")
+    x, _, aux = _scan_groups(params, cfg, rt, x, positions=positions,
+                             remat=remat)
+    return logits_from_hidden(params, cfg, x), aux
+
+
+# ------------------------------------------------------------------ serve
+
+def _attn_alloc(cfg, kind: str, cache_len: int) -> int:
+    if kind == "attn_local" and cfg.sliding_window:
+        return min(cache_len, cfg.sliding_window)
+    return cache_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=None) -> list:
+    """Zero/empty decode cache (list over group positions, leaves [G,...])."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    g = cfg.n_groups
+    quant = cfg.kv_cache_dtype == "int8"
+    kv_dtype = jnp.int8 if quant else dtype
+    caches = []
+    for kind in cfg.layer_kinds():
+        if kind in ("attn", "attn_local"):
+            w = _attn_alloc(cfg, kind, cache_len)
+            c = {
+                "k": jnp.zeros((g, batch, w, cfg.n_kv_heads, cfg.head_dim),
+                               kv_dtype),
+                "v": jnp.zeros((g, batch, w, cfg.n_kv_heads, cfg.head_dim),
+                               kv_dtype),
+                "pos": jnp.full((g, batch, w), -1, jnp.int32)}
+            if quant:
+                c["k_scale"] = jnp.zeros((g, batch, w, cfg.n_kv_heads),
+                                         jnp.float32)
+                c["v_scale"] = jnp.zeros((g, batch, w, cfg.n_kv_heads),
+                                         jnp.float32)
+            caches.append({"attn": c})
+        elif kind == "mamba":
+            caches.append({"mamba": {
+                "conv": jnp.zeros((g, batch, cfg.mamba_d_conv - 1,
+                                   cfg.mamba_d_inner), dtype),
+                "ssm": jnp.zeros((g, batch, cfg.mamba_d_inner,
+                                  cfg.mamba_d_state), jnp.float32)}})
+        elif kind == "rwkv":
+            h, hk = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+            caches.append({"rwkv": {
+                "shift_t": jnp.zeros((g, batch, 1, cfg.d_model), dtype),
+                "shift_c": jnp.zeros((g, batch, 1, cfg.d_model), dtype),
+                "wkv": jnp.zeros((g, batch, h, hk, hk), jnp.float32)}})
+    return caches
+
+
+def prefill(params, cfg: ModelConfig, rt: Runtime, tokens: Array, *,
+            embeds: Array | None = None, cache_len: int | None = None):
+    """Process the prompt; return (last_logits [B,V], cache, cache_pos [B])."""
+    x = embed_tokens(params, cfg, tokens)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    cache_len = cache_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constrain(rt, x, "dp", None, None)
+    x, kv_stacks, _ = _scan_groups(params, cfg, rt, x, positions=positions)
+
+    # Build the decode cache from the per-layer (k, v) stacks.
+    caches = init_cache(cfg, b, cache_len)
+    quant = cfg.kv_cache_dtype == "int8"
+    for j, kind in enumerate(cfg.layer_kinds()):
+        if kind in ("attn", "attn_local"):
+            k_all, v_all = kv_stacks[j]["attn_kv"]       # [G,B,S,KV,hd]
+            w = caches[j]["attn"]["k"].shape[2]
+            tail = jnp.arange(s - min(s, w), s)          # last W positions
+            slots = tail % w
+            k_tail, v_tail = k_all[:, :, tail], v_all[:, :, tail]
+            if quant:
+                k_tail, k_s = layers.quantize_kv(k_tail)
+                v_tail, v_s = layers.quantize_kv(v_tail)
+                caches[j]["attn"]["k_scale"] = \
+                    caches[j]["attn"]["k_scale"].at[:, :, slots].set(k_s)
+                caches[j]["attn"]["v_scale"] = \
+                    caches[j]["attn"]["v_scale"].at[:, :, slots].set(v_s)
+            caches[j]["attn"]["k"] = caches[j]["attn"]["k"].at[:, :, slots].set(
+                k_tail.astype(caches[j]["attn"]["k"].dtype))
+            caches[j]["attn"]["v"] = caches[j]["attn"]["v"].at[:, :, slots].set(
+                v_tail.astype(caches[j]["attn"]["v"].dtype))
+            caches[j]["attn"]["pos"] = caches[j]["attn"]["pos"].at[:, :, slots].set(
+                jnp.broadcast_to(tail, caches[j]["attn"]["pos"][:, :, slots].shape))
+        elif kind == "mamba":
+            caches[j]["mamba"] = kv_stacks[j]["mamba"]
+        elif kind == "rwkv":
+            caches[j]["rwkv"] = kv_stacks[j]["rwkv"]
+    last = logits_from_hidden(params, cfg, x[:, -1:])[:, 0]
+    cache_pos = jnp.full((b,), s, jnp.int32)
+    return last, caches, cache_pos
+
+
+def decode_step(params, cfg: ModelConfig, rt: Runtime, token: Array,
+                caches, cache_pos: Array):
+    """One decode step. token [B,1] int32, cache_pos [B] = current length.
+    Returns (logits [B,V], new_caches, cache_pos+1)."""
+    x = embed_tokens(params, cfg, token)
+    b = x.shape[0]
+    positions = cache_pos[:, None]
+    x = constrain(rt, x, "dp", None, None)
+    x, new_caches, _ = _scan_groups(params, cfg, rt, x, positions=positions,
+                                    caches=caches, cache_pos=cache_pos)
+    logits = logits_from_hidden(params, cfg, x)[:, 0]
+    return logits, new_caches, cache_pos + 1
+
+
+# ------------------------------------------------------------------- loss
+
+def lm_loss(params, cfg: ModelConfig, rt: Runtime, batch, *,
+            remat: bool = True, aux_weight: float = 0.01):
+    """Next-token cross-entropy (+ MoE aux). batch: {"tokens" [B,S],
+    optional "embeds" [B,P,D]} — targets are tokens shifted by one."""
+    tokens = batch["tokens"]
+    embeds = batch.get("embeds")
+    logits, aux = forward(params, cfg, rt, tokens, embeds=embeds, remat=remat)
+    p = 0 if embeds is None else embeds.shape[1]
+    pred = logits[:, p:-1]                      # positions predicting tokens
+    tgt = tokens[:, 1:]
+    logz = jax.nn.logsumexp(pred, axis=-1)
+    gold = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux_weight * aux

@@ -1,0 +1,98 @@
+"""Mamba (selective SSM) block — the Jamba hybrid's recurrent layer.
+
+Recurrence per channel c with state dim N:
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t        (ZOH discretization)
+    y_t = C_t . h_t + D * x_t
+with data-dependent (selective) B_t, C_t, dt_t. Train/prefill scans over time
+with `lax.scan` (compact HLO under the layer-group scan); decode carries
+(conv_state, ssm_state) — O(1) per token, which is what makes the
+`long_500k` cell runnable for the hybrid arch (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _causal_conv(x: Array, w: Array, b: Array, conv_state: Array | None):
+    """Depthwise causal conv over time. x [B,T,Din], w [Din,K], b [Din].
+    conv_state [B, K-1, Din] for decode. Returns (y, new_state)."""
+    k = w.shape[-1]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # [B, T+K-1, Din]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[:, i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):, :]
+    return y, new_state
+
+
+def mamba_block(p, x: Array, cfg, *, state=None):
+    """x [B,T,D]. state None (train/prefill) or
+    {"conv": [B,K-1,Din], "ssm": [B,Din,N]} (decode). Returns (y, new_state)."""
+    b, t, d = x.shape
+    din, n = cfg.mamba_d_inner, cfg.mamba_d_state
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])         # [B,T,2*Din]
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    xin, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xin = jax.nn.silu(xin)
+
+    proj = jnp.einsum("bte,er->btr", xin, p["x_proj"])      # [B,T,R+2N]
+    dt_low, b_mat, c_mat = jnp.split(
+        proj, [cfg.dt_rank, cfg.dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("btr,re->bte", dt_low, p["dt_proj"])
+                         + p["dt_bias"])                    # [B,T,Din]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # [Din,N]
+    dt32 = dt.astype(jnp.float32)
+    x32 = xin.astype(jnp.float32)
+
+    h0 = (state["ssm"].astype(jnp.float32) if state is not None
+          else jnp.zeros((b, din, n), jnp.float32))
+
+    # Discretize *inside* the step: materializing a_bar/bx as [B,T,Din,N]
+    # arrays cost 2 x 4.3 GB/device/layer of HBM traffic on the Jamba
+    # train_4k cell (N=16x blowup); computed per step they live in
+    # registers. unroll fuses consecutive steps, amortizing the
+    # state's fusion-boundary round trips (EXPERIMENTS.md §Perf, Jamba
+    # iterations 1-2).
+    if cfg.mamba_naive_disc:
+        # §Perf B-iteration-0 baseline: precompute a_bar/bx as [B,T,Din,N]
+        # arrays (the reference selective-scan formulation) — a 16x (N)
+        # blowup of the scan inputs, kept behind a flag for the A/B.
+        a_bar_all = jnp.exp(dt32[..., None] * a)            # [B,T,Din,N]
+        bx_all = (dt32 * x32)[..., None] * b_mat.astype(jnp.float32)[:, :, None, :]
+
+        def step0(h, inp):
+            a_t, bx_t, c_t = inp
+            h = a_t * h + bx_t
+            return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+        xs0 = (a_bar_all.transpose(1, 0, 2, 3), bx_all.transpose(1, 0, 2, 3),
+               c_mat.astype(jnp.float32).transpose(1, 0, 2))
+        h_final, ys = jax.lax.scan(step0, h0, xs0)
+    else:
+        def step(h, inp):
+            dt_t, b_t, c_t, x_t = inp       # [B,Din],[B,N],[B,N],[B,Din]
+            a_bar = jnp.exp(dt_t[..., None] * a)            # [B,Din,N]
+            bx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+            h = a_bar * h + bx
+            y = jnp.einsum("bdn,bn->bd", h, c_t)
+            return h, y
+
+        xs = (dt32.transpose(1, 0, 2),
+              b_mat.astype(jnp.float32).transpose(1, 0, 2),
+              c_mat.astype(jnp.float32).transpose(1, 0, 2),
+              x32.transpose(1, 0, 2))
+        h_final, ys = jax.lax.scan(step, h0, xs,
+                                   unroll=cfg.mamba_scan_unroll)  # ys [T,B,Din]
+    y = ys.transpose(1, 0, 2) + p["d"] * x32                # skip via D
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    new_state = {"conv": new_conv.astype(x.dtype), "ssm": h_final}
+    return out, new_state

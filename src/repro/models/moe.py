@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN: top-k routing with per-sequence capacity and
+scatter-based dispatch into dense [E, C, D] expert tiles.
+
+Design rationale (DESIGN.md §5 — this is where the paper's discipline meets
+the LM substrate): each expert's workload is a *small dense problem*; rather
+than launching per-expert ragged work, tokens are packed into fixed-capacity
+dense tiles so expert compute is one batched MXU einsum. Routing/dispatch is
+computed **per sequence** (the batch dim is the GShard 'group' dim): every op
+is batched over B, so sharding B over the data axes makes routing entirely
+local to each data shard — no cross-shard sorts or global cumsums, which is
+what makes this formulation scale to 1000+ nodes.
+
+Tokens over capacity are dropped (contribute zero; the residual passes them
+through) — standard GShard/Switch semantics with capacity_factor slack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def moe_capacity(seq_len: int, n_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    c = int(seq_len * top_k * capacity_factor / n_experts) + 1
+    return max(top_k, min(c, seq_len))
+
+
+def route(router_w: Array, x: Array, top_k: int):
+    """x [B,S,D] -> (weights [B,S,k], experts [B,S,k] int32, aux_loss)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    weights, experts = jax.lax.top_k(logits, top_k)
+    weights = jax.nn.softmax(weights, axis=-1)            # renorm over top-k
+    # Switch-style load-balancing aux loss (fraction routed x mean prob)
+    n_e = router_w.shape[-1]
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(experts[..., 0], n_e, dtype=jnp.float32),
+                    axis=(0, 1))
+    aux = n_e * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+    return weights, experts, aux
+
+
+def _dispatch_indices(experts: Array, n_experts: int, capacity: int):
+    """Per sequence: experts [S, k] -> (slot [S*k], keep [S*k]) where slot is
+    the position inside the destination expert's capacity buffer."""
+    s, k = experts.shape
+    flat = experts.reshape(s * k)                          # token-major order
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)   # [S*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - 1                   # position per expert
+    slot = jnp.take_along_axis(pos, flat[:, None], axis=1)[:, 0]
+    keep = slot < capacity
+    return jnp.clip(slot, 0, capacity - 1), keep
+
+
+def moe_ffn(p, x: Array, cfg, rt=None) -> tuple[Array, Array]:
+    """p: {router [D,E], w_in [E,D,2F], w_out [E,F,D]}; x [B,S,D].
+    Returns (y [B,S,D], aux_loss).
+
+    The vmap over sequences carries `spmd_axis_name` so the partitioner pins
+    every dispatch intermediate's batch dim to the data axes — without it,
+    XLA replicates the [E,C,D] buffers over data and pays giant all-gathers
+    (observed in the granite dry-run before this fix; EXPERIMENTS.md §Perf)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = moe_capacity(s, e, k, cfg.capacity_factor)
+    # Decide whether the batch dim can be pinned to the data axes; if so,
+    # every vmapped intermediate gets an explicit sharding via
+    # spmd_axis_name + the inner constraints below. Without the pins the
+    # partitioner aligns the [B,E,C,D] dispatch buffers to the FSDP weight
+    # layout — replicating the batch dim and paying ~2.5 TB/device of
+    # masked-gather all-reduces (measured; EXPERIMENTS.md §Perf).
+    spmd = None
+    if rt is not None and rt.mesh is not None:
+        from repro.distributed.sharding import constrain
+        x = constrain(rt, x, "dp", None, None)   # seq must be shard-local
+        n_dp = 1
+        for a in rt.batch_axes:
+            n_dp *= rt.mesh.shape[a]
+        if b % n_dp == 0 and b >= n_dp:
+            spmd = rt.batch_axes if len(rt.batch_axes) > 1 else rt.batch_axes[0]
+
+    def cst(v, *spec):
+        if spmd is None:
+            return v
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            v, NamedSharding(rt.mesh, P(*spec)))
+
+    weights, experts, aux = route(p["router"], x, k)
+
+    def one_seq(x_s, w_s, e_s):
+        """x_s [S,D], w_s [S,k], e_s [S,k] -> [S,D].
+
+        Gather-based dispatch: the only scatter builds a tiny int32
+        slot->token map [E,C]; every wide tensor then moves through gathers,
+        which the SPMD partitioner handles with the batch dim sharded
+        (scatter-based dispatch forced XLA to replicate the [B,E,C,D]
+        buffers over the data axis — see EXPERIMENTS.md §Perf, MoE fix)."""
+        slot, keep = _dispatch_indices(e_s, e, cap)        # [S*k]
+        flat_e = e_s.reshape(s * k)
+        sentinel = s * k
+        assign = jnp.where(keep, jnp.arange(s * k, dtype=jnp.int32), sentinel)
+        tok_for_slot = jnp.full((e, cap), sentinel, jnp.int32)
+        tok_for_slot = tok_for_slot.at[flat_e, slot].min(assign)  # [E,C] small
+        # gather tokens into dense expert tiles (sentinel -> zero row)
+        x_pad = jnp.concatenate([x_s, jnp.zeros((1, d), x_s.dtype)], axis=0)
+        src_tok = jnp.minimum(tok_for_slot // k, s)        # [E,C] token ids
+        buf = cst(x_pad[src_tok], None, None, None)        # [E,C,D] gather
+        if cfg.moe_use_kernel:
+            # Fused expert FFN (kernels/moe_experts.py): hidden activations
+            # stay in VMEM — the SPA-GCN fusion discipline applied to the
+            # MoE HBM bottleneck (EXPERIMENTS.md §Perf, granite iteration 6).
+            from repro.kernels.moe_experts import moe_expert_ffn
+            bc = min(128, cap)
+            pad_c = (-cap) % bc
+            buf_p = jnp.pad(buf, ((0, 0), (0, pad_c), (0, 0)))
+            y_p = moe_expert_ffn(buf_p, p["w_in"], p["w_out"], block_c=bc)
+            y_buf = cst(y_p[:, :cap], None, None, None)
+        else:
+            h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])  # fused gate+up
+            h = cst(h, None, None, rt.tp_axis if rt else None)
+            gate, up = jnp.split(h, 2, axis=-1)
+            h = jax.nn.silu(gate) * up
+            # NOTE (§Perf iteration 5, refuted): pinning y_buf's D to the
+            # model axis to force a reduce-scatter here measured *worse*
+            # (1356 vs 1223 GB wire) — XLA does not sink the reduction
+            # through the slot gather and pays an extra reshard.
+            y_buf = cst(jnp.einsum("ecf,efd->ecd", h, p["w_out"]),
+                        None, None, None)
+        y_tok = y_buf[flat_e, slot]                        # gather back [S*k,D]
+        y_tok = y_tok * (w_s.reshape(s * k)[:, None] * keep[:, None])
+        return jnp.sum(y_tok.reshape(s, k, d), axis=1)
+
+    y = jax.vmap(one_seq, spmd_axis_name=spmd)(
+        x, weights.astype(x.dtype), experts)
+    return y.astype(x.dtype), aux

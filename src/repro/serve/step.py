@@ -1,0 +1,56 @@
+"""Serving steps: prefill and decode, for all families incl. enc-dec/VLM.
+
+`decode_32k` / `long_500k` cells lower `serve_step` (one new token against a
+seq_len KV cache), `prefill_32k` lowers the prompt pass returning last-token
+logits plus the populated cache — per the assignment's shape semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Runtime
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig
+
+
+def build_prefill_step(cfg: ModelConfig, rt: Runtime):
+    if cfg.is_enc_dec:
+        def step(params, frames, tokens):
+            last, enc_out, caches, pos = encdec.prefill_encdec(
+                params, cfg, rt, frames, tokens)
+            return last, enc_out, caches, pos
+        return step
+
+    def step(params, tokens, embeds=None):
+        return lm.prefill(params, cfg, rt, tokens, embeds=embeds)
+    return step
+
+
+def build_decode_step(cfg: ModelConfig, rt: Runtime):
+    if cfg.is_enc_dec:
+        def step(params, token, enc_out, caches, cache_pos):
+            return encdec.decode_step_encdec(params, cfg, rt, token, enc_out,
+                                             caches, cache_pos)
+        return step
+
+    def step(params, token, caches, cache_pos):
+        return lm.decode_step(params, cfg, rt, token, caches, cache_pos)
+    return step
+
+
+def greedy_generate(params, cfg: ModelConfig, rt: Runtime, prompt, *,
+                    max_new: int = 16, embeds=None):
+    """Host-loop greedy decoding (examples/tests; production uses the jitted
+    steps directly with continuous batching — serve/batching.py)."""
+    decode = jax.jit(build_decode_step(cfg, rt))
+    if cfg.is_enc_dec:
+        raise NotImplementedError("use encdec steps directly")
+    last, caches, pos = jax.jit(build_prefill_step(cfg, rt))(
+        params, prompt, embeds)
+    toks = [jnp.argmax(last, -1)]
+    for _ in range(max_new - 1):
+        logits, caches, pos = decode(params, toks[-1][:, None], caches, pos)
+        toks.append(jnp.argmax(logits, -1))
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,101 @@
+"""Training loop: checkpoint/restart, straggler detection, failure recovery.
+
+Fault-tolerance contract (DESIGN.md §6):
+  * checkpoint every `ckpt_every` steps (atomic, keep-k — ckpt/manager.py);
+  * `resume="auto"` restores the latest complete checkpoint and *replays the
+    data stream deterministically* (data/tokens.py keys batches by step);
+  * StragglerMonitor keeps an EWMA of step wall-time; a step slower than
+    `threshold x` EWMA is flagged — on a real fleet the runner would evict
+    the slow host and restart from the last checkpoint (here: logged +
+    counted, and the policy is unit-tested);
+  * any exception inside the step triggers a restore-and-retry
+    (`max_retries`), the standard preemption/XLA-crash path.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.ckpt import manager as ckpt
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 3.0
+    alpha: float = 0.2            # EWMA weight
+    ewma: float | None = None
+    flagged: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = dt > self.threshold * self.ewma
+        if slow:
+            self.flagged.append((step, dt, self.ewma))
+        # straggler steps don't poison the baseline
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * min(
+            dt, self.threshold * self.ewma)
+        return slow
+
+
+def run(step_fn, params, opt_state, batch_fn, *, n_steps: int,
+        ckpt_dir: str | None = None, ckpt_every: int = 50,
+        resume: str | None = "auto", max_retries: int = 2,
+        log_every: int = 10, monitor: StragglerMonitor | None = None,
+        on_metrics=None):
+    """Generic driver used by launch/train.py and the failure-recovery test.
+    batch_fn(step) -> batch pytree. Returns (params, opt_state, history)."""
+    monitor = monitor or StragglerMonitor()
+    start = 0
+    if ckpt_dir and resume == "auto":
+        last = ckpt.latest_step(ckpt_dir)
+        if last is not None:
+            params, opt_state = ckpt.restore(ckpt_dir, last,
+                                             (params, opt_state))
+            start = last
+            print(f"[loop] resumed from step {last}")
+
+    history = []
+    step = start
+    retries = 0
+    while step < n_steps:
+        try:
+            t0 = time.time()
+            batch = batch_fn(step)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            slow = monitor.observe(step, dt)
+            if slow:
+                print(f"[loop] straggler at step {step}: {dt:.3f}s "
+                      f"(ewma {monitor.ewma:.3f}s) — would evict+restart on fleet")
+            if step % log_every == 0 or step == n_steps - 1:
+                rec = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                rec["sec_per_step"] = dt
+                history.append(rec)
+                if on_metrics:
+                    on_metrics(step, rec)
+            step += 1
+            if ckpt_dir and step % ckpt_every == 0:
+                ckpt.save(ckpt_dir, step, (params, opt_state))
+            retries = 0
+        except Exception:
+            retries += 1
+            if not ckpt_dir or retries > max_retries:
+                raise
+            last = ckpt.latest_step(ckpt_dir)
+            print(f"[loop] step {step} failed; restoring step {last} "
+                  f"(retry {retries}/{max_retries})")
+            if last is not None:
+                params, opt_state = ckpt.restore(ckpt_dir, last,
+                                                 (params, opt_state))
+                step = last
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, step, (params, opt_state))
+    return params, opt_state, history

@@ -1,0 +1,103 @@
+"""Train-step builders: value_and_grad -> clip -> AdamW, for both the LM
+substrate and the paper's SimGNN model.
+
+Under jit with NamedSharding'd params, XLA SPMD derives the FSDP collectives
+(all-gather params on use, reduce-scatter grads) automatically; the optimizer
+update then runs fully sharded (ZeRO-3 equivalent). Optional int8 gradient
+compression (distributed/compression.py) targets the cross-pod DCN
+all-reduce. Gradient accumulation microbatches via lax.scan when
+`accum_steps > 1`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Runtime
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt
+
+Array = jax.Array
+
+
+def loss_for(cfg: ModelConfig) -> Callable:
+    if cfg.is_enc_dec:
+        return encdec.encdec_loss
+    return lm.lm_loss
+
+
+def build_train_step(cfg: ModelConfig, rt: Runtime, *,
+                     peak_lr: float = 3e-4, max_grad_norm: float = 1.0,
+                     accum_steps: int = 1, compress_grads: bool = False,
+                     constrain_grads: bool = True):
+    """Returns step_fn(params, opt_state, batch) -> (params, opt_state, metrics).
+    batch leaves may carry a leading accum dim when accum_steps > 1.
+
+    constrain_grads pins each gradient to its parameter's sharding at the
+    autodiff output. Measured neutral on the gemma2 cell (the partitioner
+    already lands grads in param sharding there — §Perf appendix D,
+    iteration D2 refuted); kept as a zero-cost guard against partitioner
+    drift on other architectures."""
+    loss_fn = loss_for(cfg)
+
+    def fwd_bwd(params, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, rt, batch))(params)
+        if constrain_grads and rt.mesh is not None:
+            from repro.distributed.sharding import param_shardings
+            shardings = param_shardings(rt, grads)
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s)
+                if s is not None else g, grads, shardings)
+        return loss, grads
+
+    def step_fn(params, opt_state, batch):
+        if accum_steps > 1:
+            def micro(acc, mb):
+                loss, grads = fwd_bwd(params, mb)
+                return (acc[0] + loss,
+                        jax.tree.map(jnp.add, acc[1], grads)), None
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(micro, zero, batch)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        else:
+            loss, grads = fwd_bwd(params, batch)
+
+        if compress_grads:
+            from repro.distributed.compression import int8_compress_tree
+            grads = int8_compress_tree(grads)
+
+        grads, grad_norm = opt.clip_by_global_norm(grads, max_grad_norm)
+        lr = opt.cosine_schedule(opt_state.step, peak_lr=peak_lr)
+        params, opt_state = opt.adamw_update(grads, opt_state, params, lr=lr)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": grad_norm,
+                   "lr": lr, "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return step_fn
+
+
+def build_simgnn_train_step(*, peak_lr: float = 1e-3,
+                            max_grad_norm: float = 1.0):
+    """Train step for the paper's model (MSE on exp(-nGED) targets)."""
+    from repro.core.simgnn import simgnn_loss
+
+    def step_fn(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(simgnn_loss)(params, batch)
+        grads, grad_norm = opt.clip_by_global_norm(grads, max_grad_norm)
+        lr = opt.cosine_schedule(opt_state.step, peak_lr=peak_lr, warmup=50,
+                                 total=2_000)
+        params, opt_state = opt.adamw_update(grads, opt_state, params, lr=lr,
+                                             weight_decay=1e-4)
+        return params, opt_state, {"loss": loss, "grad_norm": grad_norm,
+                                   "lr": lr, "step": opt_state.step}
+
+    return step_fn

@@ -1,0 +1,171 @@
+"""Optimizer math, checkpoint/restart, elastic resharding, straggler policy."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import manager as ckpt
+from repro.train import optimizer as opt
+from repro.train.loop import StragglerMonitor, run
+
+
+def test_adamw_matches_reference_math():
+    """One AdamW step against a hand-computed numpy reference."""
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]]), "b": jnp.asarray([0.1])}
+    g = {"w": jnp.asarray([[0.1, 0.2], [-0.3, 0.4]]), "b": jnp.asarray([-0.5])}
+    state = opt.adamw_init(p)
+    lr, b1, b2, eps, wd = 0.1, 0.9, 0.95, 1e-8, 0.1
+    new_p, new_state = opt.adamw_update(g, state, p, lr=lr, b1=b1, b2=b2,
+                                        eps=eps, weight_decay=wd)
+    for k in p:
+        gn = np.asarray(g[k], np.float64)
+        m = (1 - b1) * gn
+        v = (1 - b2) * gn * gn
+        mh = m / (1 - b1)
+        vh = v / (1 - b2)
+        delta = mh / (np.sqrt(vh) + eps)
+        if gn.ndim >= 2:
+            delta = delta + wd * np.asarray(p[k])
+        ref = np.asarray(p[k]) - lr * delta
+        np.testing.assert_allclose(np.asarray(new_p[k]), ref, rtol=1e-5)
+    assert int(new_state.step) == 1
+
+
+def test_adamw_bf16_state_dtype():
+    p = {"w": jnp.ones((4, 4))}
+    state = opt.adamw_init(p, "bfloat16")
+    assert state.m["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.full((4, 4), 0.1)}
+    new_p, new_state = opt.adamw_update(g, state, p, lr=0.01)
+    assert new_state.v["w"].dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(new_p["w"])))
+
+
+def test_cosine_schedule_shape():
+    # first update (step counter 0) already has a nonzero lr
+    s = opt.cosine_schedule(jnp.asarray(0), peak_lr=1.0, warmup=10, total=100)
+    assert abs(float(s) - 0.1) < 1e-6
+    s_peak = opt.cosine_schedule(jnp.asarray(9), peak_lr=1.0, warmup=10,
+                                 total=100)
+    assert abs(float(s_peak) - 1.0) < 1e-6
+    s_end = opt.cosine_schedule(jnp.asarray(99), peak_lr=1.0, warmup=10,
+                                total=100, floor=0.1)
+    assert abs(float(s_end) - 0.1) < 1e-6
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - np.sqrt(250)) < 1e-4
+    new_norm = opt.global_norm(clipped)
+    assert abs(float(new_norm) - 1.0) < 1e-5
+
+
+# ------------------------------------------------------------- checkpoints
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"layer": [{"w": jax.random.normal(k, (4, 8)),
+                       "b": jnp.zeros(8)}],
+            "step_count": jnp.asarray(7, jnp.int32)}
+
+
+def test_ckpt_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 100, t)
+    restored = ckpt.restore(str(tmp_path), 100, t)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), t, restored)
+
+
+def test_ckpt_keep_k_and_latest(tmp_path):
+    t = _tree()
+    for s in (10, 20, 30, 40):
+        ckpt.save(str(tmp_path), s, t, keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 40
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_000000030", "step_000000040"]
+
+
+def test_ckpt_crash_mid_save_ignored(tmp_path):
+    """A .tmp directory left by a crash must not be picked up by restart."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 10, t)
+    os.makedirs(tmp_path / "step_000000020.tmp")   # simulated torn write
+    assert ckpt.latest_step(str(tmp_path)) == 10
+
+
+def test_ckpt_structure_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    bad = {"other": jnp.zeros(3)}
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), 1, bad)
+
+
+def test_restart_resumes_bit_exact(tmp_path):
+    """Train 6 steps straight vs 3 steps + simulated crash + resume: final
+    params identical (deterministic data keyed by step)."""
+    def step_fn(params, opt_state, batch):
+        loss = jnp.sum((params["w"] - batch) ** 2)
+        g = {"w": 2 * (params["w"] - batch)}
+        new_p, new_o = opt.adamw_update(g, opt_state, params, lr=0.05)
+        return new_p, new_o, {"loss": loss}
+
+    def batch_fn(step):
+        return jnp.full((3,), float(step))
+
+    p0 = {"w": jnp.zeros(3)}
+    # straight run, checkpointing every 2
+    pa, oa, _ = run(step_fn, p0, opt.adamw_init(p0), batch_fn, n_steps=6,
+                    ckpt_dir=str(tmp_path / "a"), ckpt_every=2, resume=None,
+                    log_every=100)
+    # crashy run: first 3 steps, then a fresh `run` resuming from ckpt
+    pb, ob, _ = run(step_fn, p0, opt.adamw_init(p0), batch_fn, n_steps=3,
+                    ckpt_dir=str(tmp_path / "b"), ckpt_every=2, resume=None,
+                    log_every=100)
+    pb2, ob2, _ = run(step_fn, p0, opt.adamw_init(p0), batch_fn, n_steps=6,
+                      ckpt_dir=str(tmp_path / "b"), ckpt_every=2,
+                      resume="auto", log_every=100)
+    np.testing.assert_allclose(np.asarray(pa["w"]), np.asarray(pb2["w"]),
+                               rtol=1e-6)
+    assert int(oa.step) == int(ob2.step) == 6
+
+
+def test_straggler_monitor_flags_slow_steps():
+    m = StragglerMonitor(threshold=2.0)
+    assert not m.observe(0, 1.0)
+    for s in range(1, 5):
+        assert not m.observe(s, 1.05)
+    assert m.observe(5, 5.0)            # 5x slower -> straggler
+    assert len(m.flagged) == 1
+    assert not m.observe(6, 1.0)        # baseline not poisoned
+
+
+def test_failure_recovery_in_loop(tmp_path):
+    """A step_fn that throws once mid-run: the loop restores the last
+    checkpoint and converges to the same final state as a clean run."""
+    boom = {"armed": True}
+
+    def make_step(crashes):
+        def step_fn(params, opt_state, batch):
+            if crashes and boom["armed"] and int(opt_state.step) == 4:
+                boom["armed"] = False
+                raise RuntimeError("injected failure")
+            g = {"w": 2 * (params["w"] - batch)}
+            new_p, new_o = opt.adamw_update(g, opt_state, params, lr=0.05)
+            return new_p, new_o, {"loss": jnp.sum(params["w"])}
+        return step_fn
+
+    batch_fn = lambda s: jnp.full((2,), float(s))
+    p0 = {"w": jnp.zeros(2)}
+    pa, oa, _ = run(make_step(False), p0, opt.adamw_init(p0), batch_fn,
+                    n_steps=8, ckpt_dir=str(tmp_path / "clean"),
+                    ckpt_every=2, resume=None, log_every=100)
+    pb, ob, _ = run(make_step(True), p0, opt.adamw_init(p0), batch_fn,
+                    n_steps=8, ckpt_dir=str(tmp_path / "crashy"),
+                    ckpt_every=2, resume=None, log_every=100)
+    np.testing.assert_allclose(np.asarray(pa["w"]), np.asarray(pb["w"]),
+                               rtol=1e-6)
