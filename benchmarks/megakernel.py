@@ -1,0 +1,85 @@
+"""Three-way SimGNN pair-scoring comparison, per size bucket.
+
+Paths compared (all scoring the same batch of graph pairs):
+
+  reference_jit — `core.simgnn.pair_score` under one jax.jit (XLA fusion);
+  two_kernel    — `ops.simgnn_pair_score_kernel`: fused GCN+Att pallas_call,
+                  graph embeddings round-trip HBM, fused NTN+FCN pallas_call;
+  megakernel    — `ops.pair_score_megakernel`: ONE pallas_call, nothing but
+                  the final scores touches HBM (DESIGN.md §7).
+
+On this CPU-only container the kernels run in interpret mode, so the numbers
+are the *trajectory baseline* (relative structure, dispatch counts, graph
+sizes), not TPU times. Emits one `BENCH {json}` line per (bucket, path) so
+the perf trajectory is machine-readable across PRs.
+
+Usage:  PYTHONPATH=src python benchmarks/megakernel.py [--tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/megakernel.py` support
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import time_fn
+from repro.configs.simgnn_aids import CONFIG as CFG
+from repro.core.simgnn import init_simgnn_params, pair_score
+from repro.data.graphs import bucketed_pair_batch
+from repro.kernels import ops
+
+
+def run(batch: int = 512, buckets=(8, 16, 32, 64), iters: int = 5):
+    params = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+    ref_fn = jax.jit(pair_score)
+    records = []
+    for bucket in buckets:
+        args = bucketed_pair_batch(bucket, bucket, batch, CFG.n_node_labels)
+        bp = ops.megakernel_block_pairs(bucket)
+        paths = {
+            "reference_jit": lambda: ref_fn(params, *args),
+            "two_kernel": lambda: ops.simgnn_pair_score_kernel(params, *args),
+            "megakernel": lambda: ops.pair_score_megakernel(
+                params, *args, block_pairs=bp),
+        }
+        s_ref = np.asarray(ref_fn(params, *args))
+        seconds = {}
+        for name, fn in paths.items():
+            err = float(np.max(np.abs(np.asarray(fn()) - s_ref)))  # also warms
+            seconds[name] = time_fn(fn, warmup=1, iters=iters)
+            rec = {"bench": "megakernel", "bucket": bucket, "batch": batch,
+                   "path": name,
+                   "seconds_per_call": round(seconds[name], 6),
+                   "us_per_pair": round(1e6 * seconds[name] / batch, 3),
+                   "pairs_per_s": round(batch / seconds[name], 1),
+                   "max_abs_err_vs_ref": err}
+            records.append(rec)
+            print("BENCH " + json.dumps(rec))
+        rec = {"bench": "megakernel", "bucket": bucket, "batch": batch,
+               "path": "summary",
+               "mega_speedup_vs_two_kernel":
+                   round(seconds["two_kernel"] / seconds["megakernel"], 3),
+               "mega_speedup_vs_reference":
+                   round(seconds["reference_jit"] / seconds["megakernel"], 3)}
+        records.append(rec)
+        print("BENCH " + json.dumps(rec))
+    return records
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small batch, two buckets, few iters")
+    ap.add_argument("--batch", type=int, default=512)
+    a = ap.parse_args()
+    if a.tiny:
+        run(batch=32, buckets=(8, 16), iters=2)
+    else:
+        run(batch=a.batch)

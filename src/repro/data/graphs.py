@@ -99,6 +99,25 @@ def pair_stream(seed: int, batch: int, max_nodes: int = 64,
         }
 
 
+def bucketed_pair_batch(seed: int, bucket: int, batch: int,
+                        n_labels: int = N_NODE_LABELS):
+    """Batch of graph pairs whose graphs all fit `bucket` nodes, padded to
+    it — the per-bucket workload for megakernel parity tests and benchmarks.
+    Returns (adj1, feats1, mask1, adj2, feats2, mask2)."""
+    from repro.core.batching import pad_graphs
+
+    rng = np.random.default_rng(seed)
+    g1s, g2s = [], []
+    for _ in range(batch):
+        n = int(rng.integers(max(2, bucket // 2), bucket + 1))
+        g1 = random_graph(rng, n)
+        g1s.append(g1)
+        g2s.append(edit_graph(rng, g1, int(rng.integers(0, 4))))
+    lhs = pad_graphs(g1s, n_labels, bucket)
+    rhs = pad_graphs(g2s, n_labels, bucket)
+    return (lhs.adj, lhs.feats, lhs.mask, rhs.adj, rhs.feats, rhs.mask)
+
+
 def query_pairs(seed: int, n_pairs: int) -> list[tuple[dict, dict]]:
     """A fixed list of query pairs (the paper's 10,000-query benchmark)."""
     rng = np.random.default_rng(seed)

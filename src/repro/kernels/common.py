@@ -1,4 +1,5 @@
-"""Shared Pallas utilities: interpret-mode policy and compiler params.
+"""Shared Pallas utilities: interpret-mode policy, compiler params, and the
+SimGNN layer-loop / block-spec helpers used by all three SimGNN kernels.
 
 All kernels in this package target TPU (pl.pallas_call + BlockSpec VMEM
 tiling). On this CPU-only container they are *validated* with interpret=True,
@@ -6,11 +7,19 @@ which executes the kernel body with jnp semantics. `should_interpret()`
 selects interpret mode automatically off-TPU so the same ops.py wrappers run
 everywhere; on a real TPU fleet the flag resolves to False and Mosaic compiles
 the kernels.
+
+The `*_block` functions below are the in-VMEM compute bodies shared by
+`fused_gcn.py`, `simgnn_head.py`, and the end-to-end megakernel
+`fused_pair.py` (DESIGN.md §7): they take *values* already read from refs,
+are variadic over layer count, and accumulate in fp32 regardless of the
+input dtype (bf16 in / fp32 accumulate / out-dtype store).
 """
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 try:  # renamed across jax versions
     from jax.experimental.pallas import tpu as pltpu
@@ -32,3 +41,109 @@ def compiler_params(dimension_semantics: tuple[str, ...]):
     if should_interpret() or CompilerParams is None:
         return None
     return CompilerParams(dimension_semantics=dimension_semantics)
+
+
+# ---------------------------------------------------------------- block specs
+
+def leading_block_spec(block_shape: tuple[int, ...]) -> pl.BlockSpec:
+    """BlockSpec tiling only the leading (grid) dimension: program i sees
+    rows [i*block, (i+1)*block) and the full extent of every other axis."""
+    nd = len(block_shape)
+    return pl.BlockSpec(block_shape, lambda i: (i,) + (0,) * (nd - 1))
+
+
+def replicated_spec(a: jax.Array) -> pl.BlockSpec:
+    """BlockSpec broadcasting a whole (small) array to every program — used
+    for weights, which are read from HBM once per block (the paper's 'read
+    each element only once' principle)."""
+    return pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+
+
+# ----------------------------------------------------- variadic layer plumbing
+
+def flatten_layer_params(layers) -> list[jax.Array]:
+    """[{'w','b'}, ...] -> [w1, b1, w2, b2, ...] for variadic kernel args."""
+    flat = []
+    for p in layers:
+        flat += [p["w"], p["b"]]
+    return flat
+
+
+def read_layer_refs(refs) -> list[tuple[jax.Array, jax.Array]]:
+    """Inverse of `flatten_layer_params` inside a kernel: a flat tuple of
+    (w, b) refs -> list of (w, b) *values*."""
+    assert len(refs) % 2 == 0, len(refs)
+    return [(refs[2 * i][...], refs[2 * i + 1][...])
+            for i in range(len(refs) // 2)]
+
+
+# ------------------------------------------------------------ in-VMEM bodies
+
+def normalize_adjacency_block(adj: jax.Array, mask: jax.Array) -> jax.Array:
+    """In-kernel A' = D^-1/2 (A + I) D^-1/2 on a [GB, N, N] block.
+
+    Same math as core.gcn.normalized_adjacency (parity-tested); the identity
+    is built from broadcasted_iota so Mosaic can lower it. fp32 in/out.
+    """
+    _, n, _ = adj.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    eye = (rows == cols).astype(adj.dtype)
+    m = mask[:, :, None] * mask[:, None, :]
+    a_tilde = (adj + eye[None]) * m
+    deg = jnp.sum(a_tilde, axis=-1)
+    inv_sqrt = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-12)), 0.0)
+    return a_tilde * inv_sqrt[:, :, None] * inv_sqrt[:, None, :]
+
+
+def gcn_att_block(adj_norm: jax.Array, h: jax.Array, mask: jax.Array,
+                  layer_wb, att_w: jax.Array) -> jax.Array:
+    """Variadic GCN stack + Att pooling on one graph block, all in VMEM.
+
+    adj_norm [GB, N, N], h [GB, N, F0], mask [GB, N] (fp32) -> [GB, F_last].
+    layer_wb: list of (w, b) values, any length (SimGNNConfig.gcn_dims).
+    """
+    gb, n, _ = h.shape
+    for w, b in layer_wb:
+        # Feature Transformation (paper MULT+ACC): one 2D MXU matmul for the
+        # whole graph block — (GB*N, Fin) @ (Fin, Fout).
+        hw = jnp.dot(h.reshape(gb * n, -1), w.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+        hw = (hw + b.astype(jnp.float32)).reshape(gb, n, -1)
+        # Aggregation (paper ACG): one batched contraction [GB,N,N]@[GB,N,F]
+        # — a single MXU-shaped op instead of a per-graph unrolled dot loop.
+        h = jax.lax.dot_general(adj_norm, hw, (((2,), (1,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)
+        # ReLU + mask: the paper's max(0,.) unit at the ACG output.
+        h = jnp.maximum(h, 0.0) * mask[..., None]
+
+    # Att stage (paper §4.2, Eq. 3) fused in the same program.
+    n_valid = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)   # [GB,1]
+    mean_h = jnp.sum(h * mask[..., None], axis=1) / n_valid            # [GB,F]
+    c = jnp.tanh(jnp.dot(mean_h, att_w.astype(jnp.float32),
+                         preferred_element_type=jnp.float32))          # [GB,F]
+    att = jax.nn.sigmoid(jnp.sum(h * c[:, None, :], axis=-1)) * mask   # [GB,N]
+    return jnp.sum(att[..., None] * h, axis=1)                         # [GB,F]
+
+
+def ntn_fcn_block(h1: jax.Array, h2: jax.Array, wt: jax.Array, vt: jax.Array,
+                  bias: jax.Array, fcn_wb) -> jax.Array:
+    """NTN + FCN on one pair block, all in VMEM: h1/h2 [GB, F] -> [GB, 1]
+    sigmoid scores. `wt` is W [K,F,F] pre-reshaped to [F, K*F] and `vt` is
+    V [K,2F] transposed, so both contractions are pure matmuls."""
+    gb, f = h1.shape
+    k = bias.shape[0]
+    t = jnp.dot(h1, wt.astype(jnp.float32),
+                preferred_element_type=jnp.float32)                    # [GB,K*F]
+    bilinear = jnp.sum(t.reshape(gb, k, f) * h2[:, None, :], axis=-1)  # [GB,K]
+    cat = jnp.concatenate([h1, h2], axis=-1)                           # [GB,2F]
+    linear = jnp.dot(cat, vt.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    s = jnp.maximum(bilinear + linear + bias.astype(jnp.float32), 0.0)
+    n_fc = len(fcn_wb)
+    for i, (w, b) in enumerate(fcn_wb):
+        s = jnp.dot(s, w.astype(jnp.float32),
+                    preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+        if i + 1 < n_fc:
+            s = jnp.maximum(s, 0.0)
+    return jax.nn.sigmoid(s)                                           # [GB,1]

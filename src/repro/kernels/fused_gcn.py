@@ -1,4 +1,4 @@
-"""Fused 3-layer GCN + attention-pooling Pallas TPU kernel.
+"""Fused N-layer GCN + attention-pooling Pallas TPU kernel.
 
 This is the TPU realization of SPA-GCN's central mechanism: the FPGA dataflow
 pipeline that runs *all* GCN layers plus the Att stage with no off-chip
@@ -15,8 +15,10 @@ Parallelism mapping (paper Table 2 -> TPU):
                           strictly stronger than FIFO pipelining)
   query replication    -> grid over graph blocks x chips over the mesh
 
-The grid dimension is 'parallel': graph blocks are independent (the paper's
-replicated pipelines).
+The kernel is variadic over GCN depth — any `SimGNNConfig.gcn_dims` length
+compiles (the layer loop lives in `common.gcn_att_block`, shared with the
+end-to-end megakernel in `fused_pair.py`). The grid dimension is 'parallel':
+graph blocks are independent (the paper's replicated pipelines).
 """
 
 from __future__ import annotations
@@ -27,40 +29,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import compiler_params, should_interpret
+from repro.kernels.common import (compiler_params, flatten_layer_params,
+                                  gcn_att_block, leading_block_spec,
+                                  read_layer_refs, replicated_spec,
+                                  should_interpret)
 
 
-def _kernel(adj_ref, feats_ref, mask_ref,
-            w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, watt_ref,
-            out_ref):
-    adj = adj_ref[...]                       # [GB, N, N]
-    h = feats_ref[...].astype(jnp.float32)   # [GB, N, F0]
-    mask = mask_ref[...]                     # [GB, N]
-    gb, n, _ = h.shape
-
-    for w_ref, b_ref in ((w1_ref, b1_ref), (w2_ref, b2_ref), (w3_ref, b3_ref)):
-        w = w_ref[...].astype(jnp.float32)
-        # Feature Transformation (paper MULT+ACC): one 2D MXU matmul for the
-        # whole graph block — (GB*N, Fin) @ (Fin, Fout).
-        hw = jnp.dot(h.reshape(gb * n, -1), w,
-                     preferred_element_type=jnp.float32) + b_ref[...]
-        hw = hw.reshape(gb, n, -1)
-        # Aggregation (paper ACG): per-graph small matmul A' @ (HW); the
-        # graph-block loop is unrolled (GB is a static, small tile factor).
-        h = jnp.stack([
-            jnp.dot(adj[g], hw[g], preferred_element_type=jnp.float32)
-            for g in range(gb)
-        ])
-        # ReLU + mask: the paper's max(0,.) unit at the ACG output.
-        h = jnp.maximum(h, 0.0) * mask[..., None]
-
-    # Att stage (paper §4.2, Eq. 3) fused in the same program.
-    n_valid = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)   # [GB,1]
-    mean_h = jnp.sum(h * mask[..., None], axis=1) / n_valid            # [GB,F]
-    c = jnp.tanh(jnp.dot(mean_h, watt_ref[...].astype(jnp.float32),
-                         preferred_element_type=jnp.float32))          # [GB,F]
-    att = jax.nn.sigmoid(jnp.sum(h * c[:, None, :], axis=-1)) * mask   # [GB,N]
-    out_ref[...] = jnp.sum(att[..., None] * h, axis=1).astype(out_ref.dtype)
+def _kernel(adj_ref, feats_ref, mask_ref, *refs):
+    out_ref, watt_ref, layer_refs = refs[-1], refs[-2], refs[:-2]
+    adj = adj_ref[...].astype(jnp.float32)          # [GB, N, N]
+    h = feats_ref[...].astype(jnp.float32)          # [GB, N, F0]
+    mask = mask_ref[...].astype(jnp.float32)        # [GB, N]
+    hg = gcn_att_block(adj, h, mask, read_layer_refs(layer_refs),
+                       watt_ref[...])
+    out_ref[...] = hg.astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_graphs", "interpret"))
@@ -70,28 +52,25 @@ def fused_gcn_att(adj_norm: jax.Array, feats: jax.Array, mask: jax.Array,
                   interpret: bool | None = None) -> jax.Array:
     """adj_norm [B,N,N] (pre-normalized A'), feats [B,N,F0], mask [B,N]
     -> graph embeddings [B, F_last]. B must be a multiple of block_graphs
-    (ops.py pads)."""
+    (ops.py pads). `gcn_params` may hold any number of layers."""
     if interpret is None:
         interpret = should_interpret()
     b, n, _ = adj_norm.shape
     assert b % block_graphs == 0, (b, block_graphs)
-    (w1, b1), (w2, b2), (w3, b3) = [(p["w"], p["b"]) for p in gcn_params]
-    f_out = w3.shape[1]
+    flat = flatten_layer_params(gcn_params)
+    f_out = gcn_params[-1]["w"].shape[1]
     grid = (b // block_graphs,)
 
     def blk(shape):   # per-graph-block operand
-        return pl.BlockSpec((block_graphs,) + shape, lambda i: (i,) + (0,) * len(shape))
-
-    def rep(a):       # replicated (weights): full array to every program
-        return pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+        return leading_block_spec((block_graphs,) + shape)
 
     return pl.pallas_call(
         _kernel,
         grid=grid,
-        in_specs=[blk((n, n)), blk((n, feats.shape[-1])), blk((n,)),
-                  rep(w1), rep(b1), rep(w2), rep(b2), rep(w3), rep(b3), rep(att_w)],
+        in_specs=[blk((n, n)), blk((n, feats.shape[-1])), blk((n,))]
+                 + [replicated_spec(a) for a in flat + [att_w]],
         out_specs=blk((f_out,)),
         out_shape=jax.ShapeDtypeStruct((b, f_out), feats.dtype),
         compiler_params=compiler_params(("parallel",)),
         interpret=interpret,
-    )(adj_norm, feats, mask, w1, b1, w2, b2, w3, b3, att_w)
+    )(adj_norm, feats, mask, *flat, att_w)

@@ -4,6 +4,15 @@ These are the entry points the rest of the framework uses: they handle
 padding to block multiples, parameter plumbing from the core/ model param
 trees, and the interpret-mode fallback (DESIGN.md §2 — kernels compile with
 Mosaic on TPU, run emulated elsewhere).
+
+For SimGNN pair scoring there are two kernel paths:
+
+  * `pair_score_megakernel` — ONE pallas_call for the whole pipeline
+    (DESIGN.md §7); the serving path. Nothing but the final scores touches
+    HBM.
+  * `simgnn_pair_score_kernel` — the two-kernel composition (fused GCN+Att,
+    then fused NTN+FCN head) kept as building blocks for embedding-only /
+    head-only callers and as the benchmark comparison point.
 """
 
 from __future__ import annotations
@@ -13,11 +22,13 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attn import flash_attention
 from repro.kernels.fused_gcn import fused_gcn_att
+from repro.kernels.fused_pair import fused_pair_score
 from repro.kernels.simgnn_head import simgnn_head
 from repro.kernels.wkv6 import wkv6
 
 __all__ = ["flash_attention", "wkv6", "graph_embeddings_fused",
-           "pair_scores_fused", "simgnn_pair_score_kernel"]
+           "pair_scores_fused", "simgnn_pair_score_kernel",
+           "pair_score_megakernel", "megakernel_block_pairs"]
 
 
 def _pad_batch(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
@@ -55,9 +66,11 @@ def pair_scores_fused(params, hg1, hg2, *, block_pairs: int = 128,
 def simgnn_pair_score_kernel(params, adj1, feats1, mask1, adj2, feats2, mask2,
                              *, block_graphs: int = 8,
                              interpret: bool | None = None) -> jax.Array:
-    """Full SimGNN pipeline on the kernel path: both graphs share one fused
-    GCN+Att invocation (batch 2B), then the fused NTN+FCN head. Expects *raw*
-    adjacency; normalization happens here (parity with core.simgnn)."""
+    """Full SimGNN pipeline on the two-kernel path: both graphs share one
+    fused GCN+Att invocation (batch 2B), then the fused NTN+FCN head — the
+    graph embeddings round-trip through HBM between the two launches (the
+    megakernel below removes that). Expects *raw* adjacency; normalization
+    happens here (parity with core.simgnn)."""
     from repro.core.gcn import normalized_adjacency
 
     adj = jnp.concatenate([adj1, adj2], axis=0)
@@ -70,3 +83,33 @@ def simgnn_pair_score_kernel(params, adj1, feats1, mask1, adj2, feats2, mask2,
     bp = max(8, min(128, hg1.shape[0]))
     return pair_scores_fused(params, hg1, hg2, block_pairs=bp,
                              interpret=interpret)
+
+
+def megakernel_block_pairs(n_nodes: int) -> int:
+    """Pairs-per-program policy for the megakernel, by graph bucket size.
+
+    Sized so one program's working set (two graphs' adjacency + every layer
+    activation at the widest feature dim) stays a small fraction of the
+    ~16 MB VMEM: 64 pairs at N=8 down to 8 pairs at N=64."""
+    return max(8, min(64, 512 // max(n_nodes, 1)))
+
+
+def pair_score_megakernel(params, adj1, feats1, mask1, adj2, feats2, mask2,
+                          *, block_pairs: int | None = None,
+                          interpret: bool | None = None) -> jax.Array:
+    """Full SimGNN pipeline in ONE pallas_call (DESIGN.md §7): raw adjacency
+    in, [B] scores out; normalization, the whole GCN stack, Att pooling, NTN
+    and FCN never leave VMEM. Pads B to a block multiple (pad pairs have
+    all-zero masks; their scores are sliced off)."""
+    if block_pairs is None:
+        block_pairs = megakernel_block_pairs(adj1.shape[-1])
+    b = adj1.shape[0]
+    # Never pad beyond one block: a batch smaller than block_pairs shrinks
+    # the block to B rounded up to the 8-sublane tile instead.
+    block_pairs = min(block_pairs, max(8, -(-b // 8) * 8))
+    padded = [_pad_batch(x, block_pairs)[0]
+              for x in (adj1, feats1, mask1, adj2, feats2, mask2)]
+    out = fused_pair_score(*padded, params["gcn"], params["att"]["w"],
+                           params["ntn"], params["fcn"],
+                           block_pairs=block_pairs, interpret=interpret)
+    return out[:b]

@@ -5,7 +5,9 @@ the linear term, and the whole fully-connected reduction run back-to-back in
 VMEM. The bilinear tensor contraction  h1^T W[k] h2  is reshaped into a single
 MXU matmul  (GB, F) @ (F, K*F)  followed by an elementwise reduce against h2 —
 the TPU version of the paper's observation that NTN is "a series of fixed-size
-MVMs" best served by one small dense engine.
+MVMs" best served by one small dense engine. The compute body lives in
+`common.ntn_fcn_block`, shared with the end-to-end megakernel
+(`fused_pair.py`), and is variadic over FCN depth.
 """
 
 from __future__ import annotations
@@ -16,30 +18,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import compiler_params, should_interpret
+from repro.kernels.common import (compiler_params, flatten_layer_params,
+                                  leading_block_spec, ntn_fcn_block,
+                                  read_layer_refs, replicated_spec,
+                                  should_interpret)
 
 
 def _kernel(h1_ref, h2_ref, wt_ref, vt_ref, b_ref, *fcn_refs):
     out_ref = fcn_refs[-1]
-    fcn_refs = fcn_refs[:-1]
-    h1 = h1_ref[...].astype(jnp.float32)          # [GB, F]
-    h2 = h2_ref[...].astype(jnp.float32)          # [GB, F]
-    gb, f = h1.shape
-    k = b_ref.shape[0]
-
-    t = jnp.dot(h1, wt_ref[...], preferred_element_type=jnp.float32)  # [GB, K*F]
-    bilinear = jnp.sum(t.reshape(gb, k, f) * h2[:, None, :], axis=-1)  # [GB, K]
-    cat = jnp.concatenate([h1, h2], axis=-1)                            # [GB, 2F]
-    linear = jnp.dot(cat, vt_ref[...], preferred_element_type=jnp.float32)
-    s = jnp.maximum(bilinear + linear + b_ref[...], 0.0)                # [GB, K]
-
-    n_fc = len(fcn_refs) // 2
-    for i in range(n_fc):
-        w, b = fcn_refs[2 * i][...], fcn_refs[2 * i + 1][...]
-        s = jnp.dot(s, w, preferred_element_type=jnp.float32) + b
-        if i + 1 < n_fc:
-            s = jnp.maximum(s, 0.0)
-    out_ref[...] = jax.nn.sigmoid(s).astype(out_ref.dtype)              # [GB, 1]
+    scores = ntn_fcn_block(h1_ref[...].astype(jnp.float32),
+                           h2_ref[...].astype(jnp.float32),
+                           wt_ref[...], vt_ref[...], b_ref[...],
+                           read_layer_refs(fcn_refs[:-1]))
+    out_ref[...] = scores.astype(out_ref.dtype)                     # [GB, 1]
 
 
 @functools.partial(jax.jit, static_argnames=("block_pairs", "interpret"))
@@ -56,21 +47,17 @@ def simgnn_head(hg1: jax.Array, hg2: jax.Array, ntn_params, fcn_params, *,
     # V [K,2F] -> [2F, K] so the kernel sees pure matmul layouts.
     wt = jnp.transpose(ntn_params["w"], (1, 0, 2)).reshape(f, k * f)
     vt = ntn_params["v"].T
-    fcn_flat = []
-    for p in fcn_params:
-        fcn_flat += [p["w"], p["b"]]
+    fcn_flat = flatten_layer_params(fcn_params)
 
     def blk(shape):
-        return pl.BlockSpec((block_pairs,) + shape, lambda i: (i,) + (0,) * len(shape))
-
-    def rep(a):
-        return pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+        return leading_block_spec((block_pairs,) + shape)
 
     out = pl.pallas_call(
         _kernel,
         grid=(b // block_pairs,),
-        in_specs=[blk((f,)), blk((f,)), rep(wt), rep(vt), rep(ntn_params["b"])]
-                 + [rep(a) for a in fcn_flat],
+        in_specs=[blk((f,)), blk((f,)), replicated_spec(wt),
+                  replicated_spec(vt), replicated_spec(ntn_params["b"])]
+                 + [replicated_spec(a) for a in fcn_flat],
         out_specs=blk((1,)),
         out_shape=jax.ShapeDtypeStruct((b, 1), hg1.dtype),
         compiler_params=compiler_params(("parallel",)),

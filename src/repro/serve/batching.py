@@ -3,36 +3,70 @@
 SPA-GCN batches ~300 graph-matching queries per kernel launch to amortize
 OpenCL/PCIe setup (2.8x E2E there). The TPU analogues implemented here:
 
-  * `MicroBatcher` — accumulate requests until `max_batch` or `max_wait_s`,
-    then run one jitted call for the whole group (dispatch amortization);
+  * `MicroBatcher` — accumulate requests until `max_batch` or until the
+    oldest pending request has waited `max_wait_s`, then run one jitted call
+    for the whole group (dispatch amortization with a latency bound);
   * `simgnn_query_server` — the paper's exact workload: a stream of graph
-    pairs, bucketed by size (core/batching.py) and scored in fused batches.
+    pairs, bucketed by size (core/batching.py) and scored in fused batches,
+    with one compiled executable cached per bucket. `use_kernels=True`
+    routes every bucket through the single-pass megakernel
+    (kernels/fused_pair.py, DESIGN.md §7) with a VMEM-sized block-pairs
+    choice per bucket.
 
 benchmarks/fig11.py sweeps `max_batch` to reproduce the paper's batching
-curve on this implementation.
+curve on this implementation; benchmarks/megakernel.py compares the three
+pair-scoring paths per bucket.
 """
 
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 
 @dataclass
 class MicroBatcher:
+    """Size- and deadline-bounded request accumulator.
+
+    `submit` flushes when the pending group reaches `max_batch` OR when the
+    oldest pending request has already waited `max_wait_s`. Between arrivals
+    the serving loop calls `poll()` (or checks `deadline_in()`) so a lull in
+    traffic cannot strand a partial batch. `clock` is injectable for tests.
+    """
     run_batch: Callable            # list[request] -> list[result]
     max_batch: int = 256
     max_wait_s: float = 0.005
+    clock: Callable[[], float] = time.monotonic
     pending: list = field(default_factory=list)
+    oldest_ts: float | None = field(default=None, repr=False)
 
     def submit(self, request):
+        if not self.pending:
+            self.oldest_ts = self.clock()
         self.pending.append(request)
-        if len(self.pending) >= self.max_batch:
+        if len(self.pending) >= self.max_batch or self._deadline_expired():
+            return self.flush()
+        return None
+
+    def _deadline_expired(self) -> bool:
+        return (bool(self.pending)
+                and self.clock() - self.oldest_ts >= self.max_wait_s)
+
+    def deadline_in(self) -> float | None:
+        """Seconds until the pending group must flush (None if empty)."""
+        if not self.pending:
+            return None
+        return max(0.0, self.max_wait_s - (self.clock() - self.oldest_ts))
+
+    def poll(self):
+        """Flush iff the deadline has expired; the serving loop's idle tick.
+        Returns the batch results, or None if nothing was due."""
+        if self._deadline_expired():
             return self.flush()
         return None
 
@@ -40,26 +74,47 @@ class MicroBatcher:
         if not self.pending:
             return []
         batch, self.pending = self.pending, []
+        self.oldest_ts = None
         return self.run_batch(batch)
 
 
 def simgnn_query_server(params, cfg, *, use_kernels: bool = False):
     """Returns score_fn(list[(g1, g2)]) -> np.ndarray of similarity scores.
-    Buckets pairs by size, one compiled executable per bucket."""
+
+    Buckets pairs by size and keeps one jitted callable per bucket in
+    `score_fn.bucket_fns` (built lazily on first use, reused across calls —
+    the paper's 'customize per workload' principle, Table 2; XLA then caches
+    one executable per padded batch shape inside each callable). With
+    `use_kernels=True` every bucket runs the single-pass megakernel — the
+    whole wrapper (padding, kernel, slice) under one jit so serving pays a
+    single dispatch — with a per-bucket `block_pairs` sized to keep the pair
+    block's working set in VMEM.
+    """
     from repro.core.batching import bucket_pairs
     from repro.core.simgnn import pair_score
-    from repro.kernels.ops import simgnn_pair_score_kernel
+    from repro.kernels.ops import megakernel_block_pairs, pair_score_megakernel
 
-    fn = simgnn_pair_score_kernel if use_kernels else pair_score
-    jitted = jax.jit(fn)
+    bucket_fns: dict[int, Callable] = {}
+    ref_fn = None if use_kernels else jax.jit(pair_score)
+
+    def fn_for(bucket: int) -> Callable:
+        if bucket not in bucket_fns:
+            if use_kernels:
+                bucket_fns[bucket] = jax.jit(functools.partial(
+                    pair_score_megakernel,
+                    block_pairs=megakernel_block_pairs(bucket)))
+            else:
+                bucket_fns[bucket] = ref_fn     # shared: jit caches per shape
+        return bucket_fns[bucket]
 
     def score(pairs):
         out = np.zeros(len(pairs), np.float32)
         for bucket, (lhs, rhs, idxs) in bucket_pairs(
                 pairs, cfg.n_node_labels).items():
-            s = jitted(params, lhs.adj, lhs.feats, lhs.mask,
-                       rhs.adj, rhs.feats, rhs.mask)
+            s = fn_for(bucket)(params, lhs.adj, lhs.feats, lhs.mask,
+                               rhs.adj, rhs.feats, rhs.mask)
             out[idxs] = np.asarray(s)
         return out
 
+    score.bucket_fns = bucket_fns
     return score

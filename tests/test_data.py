@@ -1,6 +1,10 @@
 """Data pipeline: determinism, host sharding, GED label properties."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 

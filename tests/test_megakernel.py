@@ -1,0 +1,119 @@
+"""Single-pass pair-score megakernel (kernels/fused_pair.py) parity sweeps.
+
+Tolerance policy matches tests/test_kernels.py: fp32 sweeps at 1e-5-class
+atol vs. the pure-jnp `core.simgnn.pair_score`; bf16 inputs at the 2e-2
+bound from the ISSUE acceptance criteria.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.batching import DEFAULT_BUCKETS
+from repro.core.simgnn import SimGNNConfig, init_simgnn_params, pair_score
+from repro.data.graphs import bucketed_pair_batch as _pair_args
+from repro.kernels import ops
+from repro.kernels.fused_gcn import fused_gcn_att
+from repro.kernels import ref
+
+
+def _rel(a, b):
+    return float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-9))
+
+
+@pytest.mark.parametrize("bucket", DEFAULT_BUCKETS)
+def test_megakernel_parity_all_buckets(bucket):
+    cfg = SimGNNConfig(max_nodes=bucket)
+    params = init_simgnn_params(jax.random.PRNGKey(0), cfg)
+    args = _pair_args(bucket, bucket, 16)
+    s_mega = ops.pair_score_megakernel(params, *args, block_pairs=8,
+                                       interpret=True)
+    s_core = pair_score(params, *args)
+    np.testing.assert_allclose(np.asarray(s_mega), np.asarray(s_core),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("batch", [1, 5, 13])
+def test_megakernel_non_block_multiple_batches(batch):
+    """Pad/slice handling: any B works, pad pairs never leak into outputs."""
+    cfg = SimGNNConfig(max_nodes=16)
+    params = init_simgnn_params(jax.random.PRNGKey(1), cfg)
+    args = _pair_args(7, 16, batch)
+    s_mega = ops.pair_score_megakernel(params, *args, block_pairs=4,
+                                       interpret=True)
+    s_core = pair_score(params, *args)
+    assert s_mega.shape == (batch,)
+    np.testing.assert_allclose(np.asarray(s_mega), np.asarray(s_core),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("gcn_dims", [(64, 32), (64, 48, 32, 16)])
+def test_megakernel_variadic_gcn_depth(gcn_dims):
+    """2- and 4-layer stacks compile and match (no hardcoded w1/b1/w2/b2/w3)."""
+    cfg = SimGNNConfig(gcn_dims=gcn_dims, max_nodes=16)
+    params = init_simgnn_params(jax.random.PRNGKey(2), cfg)
+    args = _pair_args(11, 16, 8)
+    s_mega = ops.pair_score_megakernel(params, *args, block_pairs=4,
+                                       interpret=True)
+    s_core = pair_score(params, *args)
+    np.testing.assert_allclose(np.asarray(s_mega), np.asarray(s_core),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("gcn_dims", [(64, 32), (64, 48, 32, 16)])
+def test_fused_gcn_variadic_gcn_depth(gcn_dims):
+    """The refactored two-kernel building block is also depth-variadic."""
+    from repro.core.gcn import normalized_adjacency
+    cfg = SimGNNConfig(gcn_dims=gcn_dims, max_nodes=16)
+    params = init_simgnn_params(jax.random.PRNGKey(3), cfg)
+    adj, feats, mask = _pair_args(13, 16, 8)[:3]
+    a_norm = normalized_adjacency(adj, mask)
+    out_k = fused_gcn_att(a_norm, feats, mask, params["gcn"],
+                          params["att"]["w"], block_graphs=4, interpret=True)
+    out_r = ref.fused_gcn_att_ref(a_norm, feats, mask, params["gcn"],
+                                  params["att"]["w"])
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_megakernel_bf16_inputs():
+    """bf16 in / fp32 accumulate: scores within the 2e-2 acceptance bound."""
+    cfg = SimGNNConfig(max_nodes=32)
+    params = init_simgnn_params(jax.random.PRNGKey(4), cfg)
+    args = _pair_args(17, 32, 8)
+    to16 = lambda t: jax.tree.map(lambda x: x.astype(jnp.bfloat16), t)
+    s16 = ops.pair_score_megakernel(to16(params), *to16(tuple(args)),
+                                    block_pairs=4, interpret=True)
+    s_core = pair_score(params, *args)
+    assert s16.dtype == jnp.bfloat16
+    assert _rel(s16.astype(jnp.float32), s_core) < 2e-2
+
+
+def test_megakernel_matches_two_kernel_path():
+    cfg = SimGNNConfig()
+    params = init_simgnn_params(jax.random.PRNGKey(5), cfg)
+    args = _pair_args(19, 64, 12)
+    s_mega = ops.pair_score_megakernel(params, *args, interpret=True)
+    s_two = ops.simgnn_pair_score_kernel(params, *args, interpret=True)
+    np.testing.assert_allclose(np.asarray(s_mega), np.asarray(s_two),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_server_routes_kernels_through_megakernel_with_bucket_cache():
+    from repro.configs.simgnn_aids import CONFIG as SCFG
+    from repro.data.graphs import query_pairs
+    from repro.serve.batching import simgnn_query_server
+
+    params = init_simgnn_params(jax.random.PRNGKey(6), SCFG)
+    pairs = query_pairs(21, 16)
+    score_ref = simgnn_query_server(params, SCFG)
+    score_k = simgnn_query_server(params, SCFG, use_kernels=True)
+    out_ref = score_ref(pairs)
+    out_k = score_k(pairs)
+    np.testing.assert_allclose(out_k, out_ref, rtol=1e-4, atol=1e-5)
+    # one cached executable per bucket actually used, reused across calls
+    assert score_k.bucket_fns and set(score_k.bucket_fns) <= set(DEFAULT_BUCKETS)
+    fns_before = dict(score_k.bucket_fns)
+    score_k(pairs)
+    assert score_k.bucket_fns == fns_before

@@ -113,7 +113,9 @@ def test_microbatcher_amortization():
         calls.append(len(reqs))
         return [r * 2 for r in reqs]
 
-    mb = MicroBatcher(run_batch, max_batch=4)
+    # generous deadline: this test asserts size-triggered flushes only, and
+    # must not race the wall clock on a loaded CI runner
+    mb = MicroBatcher(run_batch, max_batch=4, max_wait_s=60.0)
     outs = []
     for i in range(10):
         r = mb.submit(i)
@@ -122,3 +124,44 @@ def test_microbatcher_amortization():
     outs += mb.flush()
     assert outs == [0, 2, 4, 6, 8, 10, 12, 14, 16, 18]
     assert calls == [4, 4, 2]       # batched, not 10 single calls
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_microbatcher_deadline_flush_on_submit():
+    """A submit arriving after the oldest request's deadline flushes even
+    though max_batch is far away."""
+    from repro.serve.batching import MicroBatcher
+    clk = _FakeClock()
+    mb = MicroBatcher(lambda reqs: [r * 2 for r in reqs], max_batch=100,
+                      max_wait_s=0.01, clock=clk)
+    assert mb.submit(1) is None
+    clk.t += 0.005
+    assert mb.submit(2) is None          # deadline measured from the OLDEST
+    clk.t += 0.006                       # oldest has now waited 11ms > 10ms
+    assert mb.submit(3) == [2, 4, 6]
+    assert mb.pending == []
+
+
+def test_microbatcher_deadline_poll():
+    """The idle-loop pump: poll() flushes a stranded partial batch exactly
+    when the deadline expires, and deadline_in() reports the time left."""
+    from repro.serve.batching import MicroBatcher
+    clk = _FakeClock()
+    mb = MicroBatcher(lambda reqs: [r * 2 for r in reqs], max_batch=100,
+                      max_wait_s=0.01, clock=clk)
+    assert mb.poll() is None             # empty: nothing due
+    assert mb.deadline_in() is None
+    mb.submit(7)
+    assert mb.poll() is None             # deadline not reached yet
+    assert abs(mb.deadline_in() - 0.01) < 1e-12
+    clk.t += 0.02
+    assert mb.deadline_in() == 0.0
+    assert mb.poll() == [14]
+    assert mb.poll() is None             # drained
