@@ -1,0 +1,176 @@
+"""Three-way SimGNN pair-scoring policy comparison on a mixed-size stream.
+
+Policies (all scoring the SAME batch of variable-size graph pairs):
+
+  packed        — `ops.pair_score_packed`: pairs FFD-packed into node-budget
+                  tiles with segment IDs, first-layer label gather, ONE
+                  pallas_call (DESIGN.md §8);
+  bucketed_mega — `ops.pair_score_megakernel` per size bucket (pair-max
+                  bucketing, one launch per bucket; DESIGN.md §7);
+  two_kernel    — `ops.simgnn_pair_score_kernel` per bucket (fused GCN+Att,
+                  embeddings round-trip HBM, fused NTN+FCN head).
+
+Unlike benchmarks/megakernel.py (uniform per-bucket batches), the stream
+here is the serving shape: AIDS-like sizes, query and database graph drawn
+independently (`data.graphs.search_pairs`), so the bucketed policies pay the
+pair-max padding a real search workload pays and the packed policy's
+measured pad fraction shows what FFD packing removes. On this CPU-only
+container kernels run in interpret mode — numbers are the trajectory
+baseline, not TPU times. Emits one `BENCH {json}` line per policy including
+measured pad-fraction/occupancy.
+
+Usage:  PYTHONPATH=src python benchmarks/packed.py [--tiny] [--check]
+            [--out packed_bench.json]
+
+`--check` (CI gate): non-zero exit if any kernel policy's parity vs the
+reference jit drifts above 1e-6 or the packed policy is slower than the
+bucketed megakernel.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/packed.py` support
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import time_fn
+from repro.configs.simgnn_aids import CONFIG as CFG
+from repro.core.batching import bucket_pairs, pack_pairs, unpack_pair_scores
+from repro.core.simgnn import init_simgnn_params, pair_score
+from repro.data.graphs import search_pairs
+from repro.kernels import ops
+
+PARITY_BOUND = 1e-6
+
+
+def run(batch: int = 512, node_budget: int = 64, iters: int = 3,
+        seed: int = 47):
+    params = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+    pairs = search_pairs(seed, batch)
+    sizes = np.asarray([[g1["adj"].shape[0], g2["adj"].shape[0]]
+                        for g1, g2 in pairs])
+
+    # Host-side prep for every policy happens once, outside the timed region
+    # (the serving loop reuses device buffers the same way); planner cost is
+    # reported separately below.
+    t0 = time.perf_counter()
+    packed, pstats = pack_pairs(pairs, node_budget)
+    planner_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    buckets = bucket_pairs(pairs, CFG.n_node_labels, allow_oversize=True)
+    bucketer_s = time.perf_counter() - t0
+
+    ref_fn = jax.jit(pair_score)
+
+    def run_packed():
+        return unpack_pair_scores(ops.pair_score_packed(params, packed),
+                                  packed, batch)
+
+    def run_bucketed(pair_fn):
+        out = np.zeros(batch, np.float32)
+        for b, (lhs, rhs, idxs) in buckets.items():
+            out[idxs] = np.asarray(pair_fn(params, lhs.adj, lhs.feats,
+                                           lhs.mask, rhs.adj, rhs.feats,
+                                           rhs.mask))
+        return out
+
+    policies = {
+        "packed": run_packed,
+        "bucketed_mega": lambda: run_bucketed(ops.pair_score_megakernel),
+        "two_kernel": lambda: run_bucketed(ops.simgnn_pair_score_kernel),
+    }
+
+    # Pad accounting: bucketed pads BOTH sides to the pair-max bucket.
+    bucket_of = {int(i): b for b, (_, _, idxs) in buckets.items()
+                 for i in idxs}
+    padded_rows = sum(2 * bucket_of[i] for i in range(batch))
+    real_rows = int(sizes.sum())
+    bucketed_pad = 1.0 - real_rows / padded_rows
+    packed_pad = (pstats["pad_fraction_lhs"] + pstats["pad_fraction_rhs"]) / 2
+
+    s_ref = run_bucketed(ref_fn)
+    records, seconds, parity = [], {}, {}
+    for name, fn in policies.items():
+        parity[name] = float(np.max(np.abs(fn() - s_ref)))   # also warms
+        seconds[name] = time_fn(fn, warmup=1, iters=iters)
+        rec = {"bench": "packed", "stream": "search", "batch": batch,
+               "policy": name,
+               "seconds_per_call": round(seconds[name], 6),
+               "us_per_pair": round(1e6 * seconds[name] / batch, 3),
+               "pairs_per_s": round(batch / seconds[name], 1),
+               "max_abs_err_vs_ref": parity[name],
+               "pad_fraction": round(bucketed_pad if name != "packed"
+                                     else packed_pad, 4)}
+        if name == "packed":
+            rec.update(node_budget=node_budget,
+                       n_tiles=pstats["n_tiles"],
+                       slots_per_tile=pstats["slots_per_tile"],
+                       occupancy=round(1.0 - packed_pad, 4),
+                       mean_pairs_per_tile=round(
+                           pstats["mean_pairs_per_tile"], 2),
+                       planner_seconds=round(planner_s, 6))
+        else:
+            rec.update(n_buckets=len(buckets),
+                       occupancy=round(1.0 - bucketed_pad, 4),
+                       bucketer_seconds=round(bucketer_s, 6))
+        records.append(rec)
+        print("BENCH " + json.dumps(rec))
+
+    summary = {"bench": "packed", "stream": "search", "batch": batch,
+               "policy": "summary",
+               "packed_speedup_vs_bucketed_mega":
+                   round(seconds["bucketed_mega"] / seconds["packed"], 3),
+               "packed_speedup_vs_two_kernel":
+                   round(seconds["two_kernel"] / seconds["packed"], 3),
+               "worst_kernel_parity": max(parity.values())}
+    records.append(summary)
+    print("BENCH " + json.dumps(summary))
+    return records, summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small batch, few iters")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero on parity drift or packed slowdown")
+    ap.add_argument("--out", type=str, default=None,
+                    help="write BENCH records to this JSON file")
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--node-budget", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=3)
+    a = ap.parse_args()
+    if a.tiny:
+        records, summary = run(batch=48, iters=2)
+    else:
+        records, summary = run(batch=a.batch, node_budget=a.node_budget,
+                               iters=a.iters)
+    if a.out:
+        with open(a.out, "w") as f:
+            json.dump(records, f, indent=1)
+    if a.check:
+        failures = []
+        if summary["worst_kernel_parity"] > PARITY_BOUND:
+            failures.append(f"kernel-vs-reference parity "
+                            f"{summary['worst_kernel_parity']:.2e} > "
+                            f"{PARITY_BOUND:.0e}")
+        if summary["packed_speedup_vs_bucketed_mega"] < 1.0:
+            failures.append(
+                "packed slower than bucketed megakernel "
+                f"({summary['packed_speedup_vs_bucketed_mega']}x)")
+        if failures:
+            print("CHECK FAILED: " + "; ".join(failures))
+            sys.exit(1)
+        print("CHECK OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,18 +1,23 @@
-"""Padded batching + size-bucketing for many small graphs.
+"""Padded batching, size-bucketing and node-packing for many small graphs.
 
 This is the TPU-native replacement for SPA-GCN's dynamic zero-skipping
-(DESIGN.md §2): instead of skipping zero MACs at runtime, we remove the two
+(DESIGN.md §2): instead of skipping zero MACs at runtime, we remove the
 dominant *structural* zero populations up front:
 
   * pad zeros  — graphs are padded to the smallest bucket (8/16/32/64 nodes)
                  that fits them instead of a global max, so a 10-node AIDS
                  graph costs 16^2 adjacency work, not 64^2;
+  * packing    — `pack_pairs` goes further (DESIGN.md §8): multiple
+                 variable-size graphs share one fixed `[node_budget]` tile
+                 (first-fit-decreasing), with per-node segment IDs marking
+                 graph membership, so a 17-node graph costs ~17 rows instead
+                 of a 32-row bucket;
   * adjacency zeros — aggregation can run from the edge list
                  (`edge_aggregate`) touching only real edges, the analogue of
                  the paper streaming only non-zero A' entries to the FPGA.
 
-Buckets also give XLA a small, fixed set of shapes to compile (one executable
-per bucket), mirroring the paper's per-layer parameter customization.
+Buckets/tiles also give XLA a small, fixed set of shapes to compile (one
+executable per bucket), mirroring the paper's per-layer customization.
 """
 
 from __future__ import annotations
@@ -34,6 +39,10 @@ class GraphBatch(NamedTuple):
     adj: Array            # [B, N, N]  raw 0/1 adjacency (no self loops)
     mask: Array           # [B, N]     1.0 for real nodes
     n_nodes: Array        # [B]        int32
+    labels: Array | None = None   # [B, N] int32 node labels (pad slots 0) —
+                                  # the compact form of one-hot `feats`; lets
+                                  # kernels gather W1 rows instead of
+                                  # multiplying [N, n_labels] one-hots.
 
     @property
     def max_nodes(self) -> int:
@@ -55,6 +64,7 @@ def pad_graphs(graphs: Sequence[dict], n_labels: int, max_nodes: int) -> GraphBa
     adj = np.zeros((b, max_nodes, max_nodes), np.float32)
     mask = np.zeros((b, max_nodes), np.float32)
     n_nodes = np.zeros((b,), np.int32)
+    labels = np.zeros((b, max_nodes), np.int32)
     for i, g in enumerate(graphs):
         n = g["adj"].shape[0]
         if n > max_nodes:
@@ -63,28 +73,43 @@ def pad_graphs(graphs: Sequence[dict], n_labels: int, max_nodes: int) -> GraphBa
         feats[i, np.arange(n), g["labels"]] = 1.0
         mask[i, :n] = 1.0
         n_nodes[i] = n
+        labels[i, :n] = g["labels"]
     return GraphBatch(jnp.asarray(feats), jnp.asarray(adj),
-                      jnp.asarray(mask), jnp.asarray(n_nodes))
+                      jnp.asarray(mask), jnp.asarray(n_nodes),
+                      jnp.asarray(labels))
 
 
-def bucket_for(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
+def bucket_for(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS, *,
+               allow_oversize: bool = False) -> int:
     for b in buckets:
         if n <= b:
             return b
+    if allow_oversize:
+        # Oversized queries get a power-of-two bucket of their own instead of
+        # killing the call; doubling bounds the executable count at
+        # O(log max_n) while capping pad waste at 2x.
+        b = buckets[-1]
+        while b < n:
+            b *= 2
+        return b
     raise ValueError(f"graph with {n} nodes exceeds largest bucket {buckets[-1]}")
 
 
 def bucket_pairs(pairs: Sequence[tuple], n_labels: int,
-                 buckets: Sequence[int] = DEFAULT_BUCKETS):
+                 buckets: Sequence[int] = DEFAULT_BUCKETS, *,
+                 allow_oversize: bool = False):
     """Group graph *pairs* by the bucket of the larger graph.
 
     Returns {bucket_size: (GraphBatch_lhs, GraphBatch_rhs, indices)} where
     `indices` restores the original pair order. One compiled executable per
-    bucket (the 'customize per workload' principle, paper Table 2).
+    bucket (the 'customize per workload' principle, paper Table 2). With
+    `allow_oversize`, graphs beyond the largest bucket fall into power-of-two
+    overflow buckets instead of raising.
     """
     groups: dict[int, list] = {}
     for idx, (g1, g2) in enumerate(pairs):
-        b = bucket_for(max(g1["adj"].shape[0], g2["adj"].shape[0]), buckets)
+        b = bucket_for(max(g1["adj"].shape[0], g2["adj"].shape[0]), buckets,
+                       allow_oversize=allow_oversize)
         groups.setdefault(b, []).append((idx, g1, g2))
     out = {}
     for b, items in sorted(groups.items()):
@@ -92,6 +117,128 @@ def bucket_pairs(pairs: Sequence[tuple], n_labels: int,
         lhs = pad_graphs([g for _, g, _ in items], n_labels, b)
         rhs = pad_graphs([g for _, _, g in items], n_labels, b)
         out[b] = (lhs, rhs, idxs)
+    return out
+
+
+# --------------------------------------------------------- pair packing (§8)
+
+class PackedPairBatch(NamedTuple):
+    """Graph *pairs* packed into fixed node-budget tiles (DESIGN.md §8).
+
+    Tile t holds up to P pairs; pair slot p of tile t owns one contiguous
+    node range in the lhs tile (its G1) and one in the rhs tile (its G2).
+    Adjacency is block-diagonal by construction — no pair's edges cross
+    another's range — so in-kernel masked normalization factors per graph.
+    `seg*` maps every node slot to its pair slot (pad slots: segment 0 with
+    mask 0, contributing exact zeros to every segment reduction).
+    """
+    adj1: Array           # [T, NB, NB] block-diagonal raw adjacency (lhs)
+    labels1: Array        # [T, NB] int32 node labels (pad 0)
+    mask1: Array          # [T, NB] 1.0 for real nodes
+    seg1: Array           # [T, NB] int32 pair-slot id in [0, P)
+    adj2: Array           # [T, NB, NB] (rhs)
+    labels2: Array        # [T, NB]
+    mask2: Array          # [T, NB]
+    seg2: Array           # [T, NB]
+    pair_mask: Array      # [T, P] 1.0 for real pair slots
+    pair_index: Array     # [T, P] int32 original pair position (0 where pad)
+
+    @property
+    def node_budget(self) -> int:
+        return self.adj1.shape[-1]
+
+    @property
+    def slots_per_tile(self) -> int:
+        return self.pair_mask.shape[-1]
+
+
+def pack_pairs(pairs: Sequence[tuple], node_budget: int = 64, *,
+               slots_per_tile: int | None = None):
+    """First-fit-decreasing packing of graph pairs into `[T, node_budget]`
+    tiles. Returns (PackedPairBatch, stats).
+
+    Both sides of a pair land in the *same* tile at the same pair slot (the
+    packed NTN stage scores tile-aligned slot pairs), so a pair is placed in
+    the first tile where its G1 fits the remaining lhs budget AND its G2 the
+    rhs budget. Decreasing order by total pair size keeps FFD occupancy high
+    (~0.9 on AIDS-like streams vs ~0.55 for max-side bucketing).
+
+    stats: occupancy / pad-fraction per side plus tile shape — the measured
+    quantities benchmarks/packed.py reports per policy.
+    """
+    sizes = [(g1["adj"].shape[0], g2["adj"].shape[0]) for g1, g2 in pairs]
+    for n1, n2 in sizes:
+        if max(n1, n2) > node_budget:
+            raise ValueError(
+                f"graph with {max(n1, n2)} nodes exceeds node_budget "
+                f"{node_budget}; route oversized pairs to the padded fallback")
+    cap = slots_per_tile if slots_per_tile else len(pairs) or 1
+    order = sorted(range(len(pairs)), key=lambda i: -(sizes[i][0] + sizes[i][1]))
+    tiles: list[dict] = []          # {"used1", "used2", "items": [pair idx]}
+    for i in order:
+        n1, n2 = sizes[i]
+        for t in tiles:
+            if (t["used1"] + n1 <= node_budget
+                    and t["used2"] + n2 <= node_budget
+                    and len(t["items"]) < cap):
+                t["used1"] += n1
+                t["used2"] += n2
+                t["items"].append(i)
+                break
+        else:
+            tiles.append({"used1": n1, "used2": n2, "items": [i]})
+
+    n_tiles = len(tiles) or 1
+    if slots_per_tile is None:
+        most = max((len(t["items"]) for t in tiles), default=1)
+        slots_per_tile = max(8, -(-most // 8) * 8)    # sublane-aligned P
+    adj = [np.zeros((n_tiles, node_budget, node_budget), np.float32)
+           for _ in range(2)]
+    labels = [np.zeros((n_tiles, node_budget), np.int32) for _ in range(2)]
+    mask = [np.zeros((n_tiles, node_budget), np.float32) for _ in range(2)]
+    seg = [np.zeros((n_tiles, node_budget), np.int32) for _ in range(2)]
+    pair_mask = np.zeros((n_tiles, slots_per_tile), np.float32)
+    pair_index = np.zeros((n_tiles, slots_per_tile), np.int32)
+    for t, tile in enumerate(tiles):
+        offs = [0, 0]
+        for p, idx in enumerate(tile["items"]):
+            pair_mask[t, p] = 1.0
+            pair_index[t, p] = idx
+            for side, g in enumerate(pairs[idx]):
+                n = g["adj"].shape[0]
+                o = offs[side]
+                adj[side][t, o:o + n, o:o + n] = g["adj"]
+                labels[side][t, o:o + n] = g["labels"]
+                mask[side][t, o:o + n] = 1.0
+                seg[side][t, o:o + n] = p
+                offs[side] += n
+
+    real = [sum(s[0] for s in sizes), sum(s[1] for s in sizes)]
+    cells = max(n_tiles * node_budget, 1)
+    stats = {
+        "n_pairs": len(pairs), "n_tiles": n_tiles,
+        "node_budget": node_budget, "slots_per_tile": slots_per_tile,
+        "occupancy_lhs": real[0] / cells, "occupancy_rhs": real[1] / cells,
+        "pad_fraction_lhs": 1.0 - real[0] / cells,
+        "pad_fraction_rhs": 1.0 - real[1] / cells,
+        "mean_pairs_per_tile": len(pairs) / n_tiles,
+    }
+    packed = PackedPairBatch(
+        jnp.asarray(adj[0]), jnp.asarray(labels[0]), jnp.asarray(mask[0]),
+        jnp.asarray(seg[0]),
+        jnp.asarray(adj[1]), jnp.asarray(labels[1]), jnp.asarray(mask[1]),
+        jnp.asarray(seg[1]),
+        jnp.asarray(pair_mask), jnp.asarray(pair_index))
+    return packed, stats
+
+
+def unpack_pair_scores(scores_tp, packed: PackedPairBatch,
+                       n_pairs: int) -> np.ndarray:
+    """Scatter kernel output [T, P] back to original pair order (host-side)."""
+    s = np.asarray(scores_tp, np.float32)
+    live = np.asarray(packed.pair_mask) > 0
+    out = np.zeros(n_pairs, np.float32)
+    out[np.asarray(packed.pair_index)[live]] = s[live]
     return out
 
 

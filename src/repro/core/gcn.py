@@ -75,6 +75,25 @@ def gcn_stack(layers, adj_norm: Array, h: Array, mask: Array) -> Array:
     return h
 
 
+def gcn_stack_from_labels(layers, adj_norm: Array, labels: Array,
+                          mask: Array) -> Array:
+    """GCN stack whose input is int32 node labels instead of one-hot features.
+
+    The first layer's H·W becomes a W1 row gather: one_hot(labels) @ W1 ==
+    W1[labels] *exactly* (each one-hot row sums a single non-zero product),
+    so this is bit-identical to `gcn_stack` on one-hot feats while never
+    materializing the [B, N, n_labels] block — the pure-jnp reference for
+    the kernels' first-layer one-hot elimination (DESIGN.md §8).
+    labels: [B, N] int32 (pad slots may hold any valid label; masked out).
+    """
+    hw = jnp.take(layers[0]["w"], labels, axis=0) + layers[0]["b"]
+    h = jnp.einsum("bnm,bmg->bng", adj_norm, hw)
+    h = jax.nn.relu(h) * mask[..., None]
+    for p in layers[1:]:
+        h = gcn_layer(p, adj_norm, h, mask, activation=True)
+    return h
+
+
 def gcn_stack_unfused_baseline(layers, adj_norm: Array, h: Array, mask: Array) -> Array:
     """Paper's *baseline* architecture analogue: each layer is its own jit
     region, so intermediates round-trip through HBM between layers (the

@@ -22,7 +22,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.gcn import gcn_stack, init_gcn_params, normalized_adjacency
+from repro.core.gcn import (gcn_stack, gcn_stack_from_labels, init_gcn_params,
+                            normalized_adjacency)
 
 Array = jax.Array
 
@@ -121,6 +122,23 @@ def pair_score(params, adj1, feats1, mask1, adj2, feats2, mask2) -> Array:
     feats = jnp.concatenate([feats1, feats2], axis=0)
     mask = jnp.concatenate([mask1, mask2], axis=0)
     hg = graph_embedding(params, adj, feats, mask)          # [2B, F]
+    hg1, hg2 = jnp.split(hg, 2, axis=0)
+    s = ntn_scores(params["ntn"], hg1, hg2)
+    return fcn_head(params["fcn"], s)
+
+
+def pair_score_from_labels(params, adj1, labels1, mask1,
+                           adj2, labels2, mask2) -> Array:
+    """`pair_score` taking int32 node labels instead of one-hot features —
+    bit-identical scores (gather == one-hot matmul, see
+    `gcn_stack_from_labels`) at 1/n_labels the feature-input footprint. The
+    pure-jnp reference for the packed megakernel's label path."""
+    adj = jnp.concatenate([adj1, adj2], axis=0)
+    labels = jnp.concatenate([labels1, labels2], axis=0)
+    mask = jnp.concatenate([mask1, mask2], axis=0)
+    a_norm = normalized_adjacency(adj, mask)
+    h = gcn_stack_from_labels(params["gcn"], a_norm, labels, mask)
+    hg = attention_pooling(params["att"], h, mask)
     hg1, hg2 = jnp.split(hg, 2, axis=0)
     s = ntn_scores(params["ntn"], hg1, hg2)
     return fcn_head(params["fcn"], s)

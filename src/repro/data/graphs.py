@@ -52,7 +52,8 @@ def edit_graph(rng: np.random.Generator, g: dict, n_edits: int) -> dict:
     n = adj.shape[0]
     for _ in range(n_edits):
         op = rng.integers(0, 3)
-        if op == 0 and n > 1:                      # toggle edge (add)
+        if op == 0 and n > 1:                      # add a random edge (no-op
+                                                   # if it already exists)
             a, b = rng.integers(0, n, 2)
             if a != b:
                 adj[a, b] = adj[b, a] = 1.0
@@ -127,3 +128,12 @@ def query_pairs(seed: int, n_pairs: int) -> list[tuple[dict, dict]]:
         g2 = edit_graph(rng, g1, int(rng.integers(0, 9)))
         out.append((g1, g2))
     return out
+
+
+def search_pairs(seed: int, n_pairs: int) -> list[tuple[dict, dict]]:
+    """Similarity-*search* pair stream: query and database graph sizes are
+    independent draws (query_pairs' edit-pairs always share a node count,
+    which understates the pair-max bucketing cost a real search workload
+    pays — the paper pairs 10,000 *random* compounds). No GED labels."""
+    rng = np.random.default_rng(seed)
+    return [(random_graph(rng), random_graph(rng)) for _ in range(n_pairs)]

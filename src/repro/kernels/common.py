@@ -96,19 +96,31 @@ def normalize_adjacency_block(adj: jax.Array, mask: jax.Array) -> jax.Array:
     return a_tilde * inv_sqrt[:, :, None] * inv_sqrt[:, None, :]
 
 
-def gcn_att_block(adj_norm: jax.Array, h: jax.Array, mask: jax.Array,
-                  layer_wb, att_w: jax.Array) -> jax.Array:
-    """Variadic GCN stack + Att pooling on one graph block, all in VMEM.
+def gcn_layers_block(adj_norm: jax.Array, h: jax.Array | None,
+                     mask: jax.Array, layer_wb, *,
+                     labels: jax.Array | None = None) -> jax.Array:
+    """Variadic GCN stack on one graph block, all in VMEM.
 
-    adj_norm [GB, N, N], h [GB, N, F0], mask [GB, N] (fp32) -> [GB, F_last].
+    adj_norm [GB, N, N], h [GB, N, F0], mask [GB, N] (fp32) -> [GB, N, F_last].
     layer_wb: list of (w, b) values, any length (SimGNNConfig.gcn_dims).
+
+    With `labels` [GB, N] int32, the first layer's H·W is replaced by a row
+    gather of W1 (one_hot(labels) @ W1 == W1[labels] exactly, since one-hot
+    matmul rows sum a single non-zero product): no [N, n_labels] one-hot is
+    ever materialized or multiplied, cutting the first layer's feature HBM
+    traffic ~n_labels-fold and skipping its MXU pass. `h` may be None then.
     """
-    gb, n, _ = h.shape
-    for w, b in layer_wb:
-        # Feature Transformation (paper MULT+ACC): one 2D MXU matmul for the
-        # whole graph block — (GB*N, Fin) @ (Fin, Fout).
-        hw = jnp.dot(h.reshape(gb * n, -1), w.astype(jnp.float32),
-                     preferred_element_type=jnp.float32)
+    gb, n, _ = adj_norm.shape
+    for li, (w, b) in enumerate(layer_wb):
+        if li == 0 and labels is not None:
+            # Structural feature sparsity: one-hot first layer as a gather.
+            hw = jnp.take(w.astype(jnp.float32), labels.reshape(gb * n),
+                          axis=0)
+        else:
+            # Feature Transformation (paper MULT+ACC): one 2D MXU matmul for
+            # the whole graph block — (GB*N, Fin) @ (Fin, Fout).
+            hw = jnp.dot(h.reshape(gb * n, -1), w.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
         hw = (hw + b.astype(jnp.float32)).reshape(gb, n, -1)
         # Aggregation (paper ACG): one batched contraction [GB,N,N]@[GB,N,F]
         # — a single MXU-shaped op instead of a per-graph unrolled dot loop.
@@ -116,14 +128,66 @@ def gcn_att_block(adj_norm: jax.Array, h: jax.Array, mask: jax.Array,
                                 preferred_element_type=jnp.float32)
         # ReLU + mask: the paper's max(0,.) unit at the ACG output.
         h = jnp.maximum(h, 0.0) * mask[..., None]
+    return h
 
-    # Att stage (paper §4.2, Eq. 3) fused in the same program.
+
+def att_pool_block(h: jax.Array, mask: jax.Array,
+                   att_w: jax.Array) -> jax.Array:
+    """Att stage (paper §4.2, Eq. 3): h [GB, N, F], mask [GB, N] -> [GB, F]."""
     n_valid = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)   # [GB,1]
     mean_h = jnp.sum(h * mask[..., None], axis=1) / n_valid            # [GB,F]
     c = jnp.tanh(jnp.dot(mean_h, att_w.astype(jnp.float32),
                          preferred_element_type=jnp.float32))          # [GB,F]
     att = jax.nn.sigmoid(jnp.sum(h * c[:, None, :], axis=-1)) * mask   # [GB,N]
     return jnp.sum(att[..., None] * h, axis=1)                         # [GB,F]
+
+
+def gcn_att_block(adj_norm: jax.Array, h: jax.Array, mask: jax.Array,
+                  layer_wb, att_w: jax.Array, *,
+                  labels: jax.Array | None = None) -> jax.Array:
+    """GCN stack + per-graph Att pooling: [GB, N, F0] -> [GB, F_last]."""
+    h = gcn_layers_block(adj_norm, h, mask, layer_wb, labels=labels)
+    return att_pool_block(h, mask, att_w)
+
+
+def segment_onehot(seg: jax.Array, mask: jax.Array,
+                   n_segments: int) -> jax.Array:
+    """Segment-membership matrix S [GB, P, N] from per-node segment IDs.
+
+    S[g, p, n] = 1 iff node slot n belongs to segment p AND is a real node.
+    Built from broadcasted_iota so Mosaic can lower it; pad slots (mask 0)
+    are zero in every segment row, so S-contractions give them exact-zero
+    contributions without any branch.
+    """
+    gb, n = seg.shape
+    p_ids = jax.lax.broadcasted_iota(jnp.int32, (gb, n_segments, n), 1)
+    return (seg[:, None, :] == p_ids).astype(jnp.float32) * mask[:, None, :]
+
+
+def segment_att_pool_block(h: jax.Array, mask: jax.Array, seg: jax.Array,
+                           att_w: jax.Array, n_segments: int) -> jax.Array:
+    """Att pooling per *segment* of a packed tile (DESIGN.md §8).
+
+    h [GB, N, F], seg [GB, N] int32 in [0, P) -> [GB, P, F] — the per-graph
+    leading dim of `att_pool_block` becomes a segment axis: the per-graph
+    mean/softmax-sigmoid/sum reductions turn into contractions against the
+    segment one-hot S, so all three stay MXU-shaped batched matmuls. Empty
+    segments (pad pair slots) yield all-zero embeddings.
+    """
+    s = segment_onehot(seg, mask, n_segments)                          # [GB,P,N]
+    counts = jnp.maximum(jnp.sum(s, axis=-1, keepdims=True), 1.0)      # [GB,P,1]
+    batched = (((2,), (1,)), ((0,), (0,)))
+    mean_h = jax.lax.dot_general(s, h, batched,
+                                 preferred_element_type=jnp.float32) / counts
+    gb, p, f = mean_h.shape
+    c = jnp.tanh(jnp.dot(mean_h.reshape(gb * p, f), att_w.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)).reshape(gb, p, f)
+    # Per-node context = its own segment's c, fetched by one S^T contraction.
+    c_node = jax.lax.dot_general(s, c, (((1,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)   # [GB,N,F]
+    att = jax.nn.sigmoid(jnp.sum(h * c_node, axis=-1)) * mask          # [GB,N]
+    return jax.lax.dot_general(s, att[..., None] * h, batched,
+                               preferred_element_type=jnp.float32)     # [GB,P,F]
 
 
 def ntn_fcn_block(h1: jax.Array, h2: jax.Array, wt: jax.Array, vt: jax.Array,

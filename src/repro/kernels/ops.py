@@ -5,11 +5,15 @@ padding to block multiples, parameter plumbing from the core/ model param
 trees, and the interpret-mode fallback (DESIGN.md §2 — kernels compile with
 Mosaic on TPU, run emulated elsewhere).
 
-For SimGNN pair scoring there are two kernel paths:
+For SimGNN pair scoring there are three kernel paths:
 
-  * `pair_score_megakernel` — ONE pallas_call for the whole pipeline
-    (DESIGN.md §7); the serving path. Nothing but the final scores touches
-    HBM.
+  * `pair_score_packed` — the packed-pair megakernel (DESIGN.md §8): many
+    variable-size pairs share fixed node-budget tiles (segment IDs), the
+    first layer gathers W1 rows from int32 labels instead of multiplying
+    one-hots; the serving default for one-hot-labelled graphs.
+  * `pair_score_megakernel` — ONE pallas_call per bucket-padded pair batch
+    (DESIGN.md §7); the dense-feats path, kept for non-one-hot inputs and
+    as the bucketed fallback.
   * `simgnn_pair_score_kernel` — the two-kernel composition (fused GCN+Att,
     then fused NTN+FCN head) kept as building blocks for embedding-only /
     head-only callers and as the benchmark comparison point.
@@ -23,12 +27,14 @@ import jax.numpy as jnp
 from repro.kernels.flash_attn import flash_attention
 from repro.kernels.fused_gcn import fused_gcn_att
 from repro.kernels.fused_pair import fused_pair_score
+from repro.kernels.packed_pair import packed_pair_score
 from repro.kernels.simgnn_head import simgnn_head
 from repro.kernels.wkv6 import wkv6
 
 __all__ = ["flash_attention", "wkv6", "graph_embeddings_fused",
            "pair_scores_fused", "simgnn_pair_score_kernel",
-           "pair_score_megakernel", "megakernel_block_pairs"]
+           "pair_score_megakernel", "megakernel_block_pairs",
+           "pair_score_packed", "packed_node_budget", "packed_tile_block"]
 
 
 def _pad_batch(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
@@ -113,3 +119,59 @@ def pair_score_megakernel(params, adj1, feats1, mask1, adj2, feats2, mask2,
                            params["ntn"], params["fcn"],
                            block_pairs=block_pairs, interpret=interpret)
     return out[:b]
+
+
+def packed_node_budget(max_nodes: int) -> int:
+    """Node budget for packed tiles: at least one whole graph must fit, and a
+    64-node floor keeps the tile's last dims near the 128-lane MXU tile while
+    a single tile's working set (two sides' adjacency + A' + widest-layer
+    activations, ~200 KB fp32 at NB=64) stays a small fraction of the ~16 MB
+    VMEM even at `packed_tile_block` tiles per program."""
+    return max(64, -(-max_nodes // 8) * 8)
+
+
+def packed_tile_block(node_budget: int) -> int:
+    """Tiles-per-program policy for the packed megakernel: scale down with
+    the node budget so a program's working set (two sides' adjacency + A' +
+    widest activations, ~130 KB fp32 per NB=64 tile) stays ~2 MB — a small
+    fraction of the ~16 MB VMEM (16 tiles at NB=64, 8 at NB=128)."""
+    return max(1, min(16, 1024 // max(node_budget, 1)))
+
+
+def pair_score_packed(params, packed, *, tile_block: int | None = None,
+                      quantize_tiles: bool = False,
+                      interpret: bool | None = None) -> jax.Array:
+    """Score a `core.batching.PackedPairBatch` in ONE pallas_call
+    (DESIGN.md §8): [T, P] pair-slot scores, zero at pad slots. Pads T to a
+    tile_block multiple (pad tiles carry all-zero masks; `pair_mask` zeroes
+    their slots). Use `core.batching.unpack_pair_scores` to restore the
+    original pair order.
+
+    `quantize_tiles` additionally rounds T up to the next power of two so a
+    serving loop with varying batch sizes compiles O(log T) executables
+    instead of one per tile count (the 'small, fixed set of shapes'
+    principle; pair it with a fixed planner `slots_per_tile`)."""
+    if tile_block is None:
+        tile_block = packed_tile_block(packed.node_budget)
+    t = packed.adj1.shape[0]
+    target = t
+    if quantize_tiles:
+        target = 1
+        while target < t:
+            target *= 2
+    tile_block = min(tile_block, target)
+    # Pad-tile waste is real kernel work: halve tile_block until the rounding
+    # waste is <= t/8 (always true once tile_block divides target).
+    while (tile_block > 1
+           and (-(-target // tile_block) * tile_block - target) * 8 > target):
+        tile_block //= 2
+    # target is a tile_block multiple >= t, so padding to `target` lands on it.
+    target = -(-target // tile_block) * tile_block
+    arrays = [_pad_batch(x, target)[0]
+              for x in (packed.adj1, packed.labels1, packed.mask1, packed.seg1,
+                        packed.adj2, packed.labels2, packed.mask2, packed.seg2,
+                        packed.pair_mask)]
+    out = packed_pair_score(*arrays, params["gcn"], params["att"]["w"],
+                            params["ntn"], params["fcn"],
+                            tile_block=tile_block, interpret=interpret)
+    return out[:t]

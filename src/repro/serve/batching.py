@@ -5,17 +5,22 @@ OpenCL/PCIe setup (2.8x E2E there). The TPU analogues implemented here:
 
   * `MicroBatcher` — accumulate requests until `max_batch` or until the
     oldest pending request has waited `max_wait_s`, then run one jitted call
-    for the whole group (dispatch amortization with a latency bound);
+    for the whole group (dispatch amortization with a latency bound); its
+    `stats` record every flush (size- vs deadline-triggered, occupancy) so
+    benchmarks report *measured* batch occupancy;
   * `simgnn_query_server` — the paper's exact workload: a stream of graph
-    pairs, bucketed by size (core/batching.py) and scored in fused batches,
-    with one compiled executable cached per bucket. `use_kernels=True`
-    routes every bucket through the single-pass megakernel
-    (kernels/fused_pair.py, DESIGN.md §7) with a VMEM-sized block-pairs
-    choice per bucket.
+    pairs scored in fused batches. `use_kernels=True` routes by default
+    through the packed-pair megakernel (kernels/packed_pair.py, DESIGN.md
+    §8): pairs are FFD-packed into node-budget tiles with segment IDs and
+    first-layer label gather. Size-bucketing (core/batching.py, one cached
+    executable per bucket through kernels/fused_pair.py) remains the
+    reference path and the fallback for pairs beyond the node budget;
+    oversized queries get power-of-two overflow buckets instead of killing
+    the call.
 
 benchmarks/fig11.py sweeps `max_batch` to reproduce the paper's batching
-curve on this implementation; benchmarks/megakernel.py compares the three
-pair-scoring paths per bucket.
+curve on this implementation; benchmarks/packed.py compares the packed,
+bucketed-megakernel and two-kernel scoring policies.
 """
 
 from __future__ import annotations
@@ -27,6 +32,22 @@ from typing import Callable
 
 import jax
 import numpy as np
+
+
+@dataclass
+class FlushStats:
+    """Measured MicroBatcher behavior (benchmarks/fig11.py reads these
+    instead of inferring occupancy from the request count)."""
+    batches: int = 0               # total flushes that ran a batch
+    requests: int = 0              # total requests flushed
+    size_flushes: int = 0          # flushes triggered by reaching max_batch
+    deadline_flushes: int = 0      # flushes triggered by max_wait_s
+    manual_flushes: int = 0        # explicit flush() calls
+    occupancy_sum: float = 0.0     # sum of len(batch)/max_batch per flush
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / self.batches if self.batches else 0.0
 
 
 @dataclass
@@ -44,13 +65,16 @@ class MicroBatcher:
     clock: Callable[[], float] = time.monotonic
     pending: list = field(default_factory=list)
     oldest_ts: float | None = field(default=None, repr=False)
+    stats: FlushStats = field(default_factory=FlushStats)
 
     def submit(self, request):
         if not self.pending:
             self.oldest_ts = self.clock()
         self.pending.append(request)
-        if len(self.pending) >= self.max_batch or self._deadline_expired():
-            return self.flush()
+        if len(self.pending) >= self.max_batch:
+            return self.flush(reason="size")
+        if self._deadline_expired():
+            return self.flush(reason="deadline")
         return None
 
     def _deadline_expired(self) -> bool:
@@ -67,33 +91,52 @@ class MicroBatcher:
         """Flush iff the deadline has expired; the serving loop's idle tick.
         Returns the batch results, or None if nothing was due."""
         if self._deadline_expired():
-            return self.flush()
+            return self.flush(reason="deadline")
         return None
 
-    def flush(self):
+    def flush(self, reason: str = "manual"):
         if not self.pending:
             return []
         batch, self.pending = self.pending, []
         self.oldest_ts = None
+        st = self.stats
+        st.batches += 1
+        st.requests += len(batch)
+        st.occupancy_sum += len(batch) / self.max_batch
+        if reason == "size":
+            st.size_flushes += 1
+        elif reason == "deadline":
+            st.deadline_flushes += 1
+        else:
+            st.manual_flushes += 1
         return self.run_batch(batch)
 
 
-def simgnn_query_server(params, cfg, *, use_kernels: bool = False):
+def simgnn_query_server(params, cfg, *, use_kernels: bool = False,
+                        packing: bool = True, node_budget: int | None = None):
     """Returns score_fn(list[(g1, g2)]) -> np.ndarray of similarity scores.
 
-    Buckets pairs by size and keeps one jitted callable per bucket in
-    `score_fn.bucket_fns` (built lazily on first use, reused across calls —
-    the paper's 'customize per workload' principle, Table 2; XLA then caches
-    one executable per padded batch shape inside each callable). With
-    `use_kernels=True` every bucket runs the single-pass megakernel — the
-    whole wrapper (padding, kernel, slice) under one jit so serving pays a
-    single dispatch — with a per-bucket `block_pairs` sized to keep the pair
-    block's working set in VMEM.
+    `use_kernels=True` routes by default through the packed-pair megakernel
+    (DESIGN.md §8): each call's pairs are FFD-packed into `[T, node_budget]`
+    segment-ID tiles (host-side, O(B log B)) and scored in ONE pallas_call
+    with first-layer label gather; `score_fn.last_pack_stats` exposes the
+    measured occupancy. Pairs with a graph beyond the node budget — and the
+    whole stream when `packing=False` or `use_kernels=False` — take the
+    bucketed path: one jitted callable per size bucket in
+    `score_fn.bucket_fns` (built lazily, reused across calls — the paper's
+    'customize per workload' principle, Table 2; XLA caches one executable
+    per padded batch shape inside each callable), with power-of-two overflow
+    buckets for queries beyond the largest standard bucket, so an oversized
+    graph degrades to extra padding instead of a ValueError.
     """
-    from repro.core.batching import bucket_pairs
+    from repro.core.batching import (bucket_pairs, pack_pairs,
+                                     unpack_pair_scores)
     from repro.core.simgnn import pair_score
-    from repro.kernels.ops import megakernel_block_pairs, pair_score_megakernel
+    from repro.kernels.ops import (megakernel_block_pairs, packed_node_budget,
+                                   pair_score_megakernel, pair_score_packed)
 
+    if node_budget is None:
+        node_budget = packed_node_budget(cfg.max_nodes)
     bucket_fns: dict[int, Callable] = {}
     ref_fn = None if use_kernels else jax.jit(pair_score)
 
@@ -107,14 +150,38 @@ def simgnn_query_server(params, cfg, *, use_kernels: bool = False):
                 bucket_fns[bucket] = ref_fn     # shared: jit caches per shape
         return bucket_fns[bucket]
 
-    def score(pairs):
-        out = np.zeros(len(pairs), np.float32)
+    def score_bucketed(pairs, idx, out):
         for bucket, (lhs, rhs, idxs) in bucket_pairs(
-                pairs, cfg.n_node_labels).items():
+                pairs, cfg.n_node_labels, allow_oversize=True).items():
             s = fn_for(bucket)(params, lhs.adj, lhs.feats, lhs.mask,
                                rhs.adj, rhs.feats, rhs.mask)
-            out[idxs] = np.asarray(s)
+            out[idx[idxs]] = np.asarray(s)
+
+    def score(pairs):
+        out = np.zeros(len(pairs), np.float32)
+        if not (use_kernels and packing):
+            score_bucketed(pairs, np.arange(len(pairs)), out)
+            return out
+        fits = np.asarray([max(g1["adj"].shape[0], g2["adj"].shape[0])
+                           <= node_budget for g1, g2 in pairs], bool)
+        fit_idx = np.flatnonzero(fits)
+        if len(fit_idx):
+            # Fixed slots_per_tile + power-of-two tile quantization keep the
+            # compiled-shape set small (O(log T) executables) under varying
+            # batch sizes and FFD outcomes.
+            packed, stats = pack_pairs([pairs[i] for i in fit_idx],
+                                       node_budget,
+                                       slots_per_tile=max(8, node_budget // 4))
+            score.last_pack_stats = stats
+            s = pair_score_packed(params, packed, quantize_tiles=True)
+            out[fit_idx] = unpack_pair_scores(s, packed, len(fit_idx))
+        over_idx = np.flatnonzero(~fits)
+        if len(over_idx):
+            # Oversized pairs: padded bucket fallback (power-of-two buckets).
+            score_bucketed([pairs[i] for i in over_idx], over_idx, out)
         return out
 
     score.bucket_fns = bucket_fns
+    score.last_pack_stats = None
+    score.node_budget = node_budget
     return score

@@ -101,6 +101,9 @@ def test_megakernel_matches_two_kernel_path():
 
 
 def test_server_routes_kernels_through_megakernel_with_bucket_cache():
+    """With packing=False, use_kernels=True takes the bucketed megakernel
+    fallback path: one cached executable per bucket (the packed default is
+    covered by tests/test_packed.py)."""
     from repro.configs.simgnn_aids import CONFIG as SCFG
     from repro.data.graphs import query_pairs
     from repro.serve.batching import simgnn_query_server
@@ -108,7 +111,8 @@ def test_server_routes_kernels_through_megakernel_with_bucket_cache():
     params = init_simgnn_params(jax.random.PRNGKey(6), SCFG)
     pairs = query_pairs(21, 16)
     score_ref = simgnn_query_server(params, SCFG)
-    score_k = simgnn_query_server(params, SCFG, use_kernels=True)
+    score_k = simgnn_query_server(params, SCFG, use_kernels=True,
+                                  packing=False)
     out_ref = score_ref(pairs)
     out_k = score_k(pairs)
     np.testing.assert_allclose(out_k, out_ref, rtol=1e-4, atol=1e-5)
