@@ -1,10 +1,14 @@
 """The paper's end-to-end workload: a graph-similarity search service.
 
-Streams query pairs (AIDS-like synthetic compounds), scores them with the
-batched + size-bucketed SPA-GCN pipeline, and reports throughput — the
-queries/s metric of paper Tables 5/6 and Fig. 11.
+Streams query pairs (AIDS-like synthetic compounds), scores them through the
+unified scoring engine (core/engine.py, DESIGN.md §9) and reports throughput
+— the queries/s metric of paper Tables 5/6 and Fig. 11. The engine measures
+each batch's density and picks a path (packed-sparse on the AIDS-like
+default stream); `--path` forces any of the five paths, `--avg-degree`
+changes the stream's sparsity to see the dispatch flip.
 
     PYTHONPATH=src python examples/simgnn_search.py --queries 2000 --batch 256
+    PYTHONPATH=src python examples/simgnn_search.py --kernels --path auto
 """
 
 import argparse
@@ -13,8 +17,9 @@ import time
 import jax
 
 from repro.configs.simgnn_aids import CONFIG as CFG
+from repro.core.engine import PATHS
 from repro.core.simgnn import init_simgnn_params
-from repro.data.graphs import query_pairs
+from repro.data.graphs import query_pairs, search_pairs
 from repro.serve.batching import simgnn_query_server
 
 
@@ -23,15 +28,28 @@ def main():
     ap.add_argument("--queries", type=int, default=2000)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--kernels", action="store_true",
-                    help="use the fused Pallas path (interpret mode on CPU)")
+                    help="use the fused Pallas paths (interpret mode on CPU)")
+    ap.add_argument("--path", default=None, choices=("auto",) + PATHS,
+                    help="force a scoring path (default: flags -> engine)")
+    ap.add_argument("--avg-degree", type=float, default=None,
+                    help="stream degree knob (AIDS-like ~2.1 default); "
+                         "switches to the independent-size search stream")
     args = ap.parse_args()
 
     params = init_simgnn_params(jax.random.PRNGKey(0), CFG)
-    pairs = query_pairs(seed=1, n_pairs=args.queries)
-    score = simgnn_query_server(params, CFG, use_kernels=args.kernels)
+    if args.avg_degree is None:
+        pairs = query_pairs(seed=1, n_pairs=args.queries)
+    else:
+        pairs = search_pairs(seed=1, n_pairs=args.queries,
+                             avg_degree=args.avg_degree)
+    score = simgnn_query_server(params, CFG, use_kernels=args.kernels,
+                                path=args.path)
 
-    # warmup (compile one executable per size bucket)
+    # warmup (compile the engine's executables for this shape set)
     score(pairs[: args.batch])
+    plan = score.last_plan
+    print(f"engine plan: path={plan.path} ({plan.reason}); "
+          f"{len(plan.fit_idx)} packed / {len(plan.over_idx)} bucketed")
 
     t0 = time.time()
     results = []
@@ -40,7 +58,14 @@ def main():
     dt = time.time() - t0
     qps = len(pairs) / dt
     print(f"scored {len(pairs)} queries in {dt:.2f}s -> {qps:,.0f} query/s "
-          f"(batch={args.batch}, kernels={args.kernels})")
+          f"(batch={args.batch}, kernels={args.kernels}, "
+          f"path={score.last_plan.path})")
+    if score.last_pack_stats:
+        st = score.last_pack_stats
+        print(f"last pack: {st['n_tiles']} tiles, occupancy "
+              f"{st['occupancy_lhs']:.2f}/{st['occupancy_rhs']:.2f}"
+              + (f", edge occupancy {st['edge_occupancy']:.2f}"
+                 if "edge_occupancy" in st else ""))
     print(f"first scores: {[f'{s:.3f}' for s in results[0][:6]]}")
 
 

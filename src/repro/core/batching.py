@@ -14,7 +14,10 @@ dominant *structural* zero populations up front:
                  of a 32-row bucket;
   * adjacency zeros — aggregation can run from the edge list
                  (`edge_aggregate`) touching only real edges, the analogue of
-                 the paper streaming only non-zero A' entries to the FPGA.
+                 the paper streaming only non-zero A' entries to the FPGA;
+                 `pack_pairs(with_edges=True)` emits the packed-CSR tile
+                 form of the same non-zeros (`PackedEdges`, DESIGN.md §9)
+                 that the packed-sparse megakernel aggregates from.
 
 Buckets/tiles also give XLA a small, fixed set of shapes to compile (one
 executable per bucket), mirroring the paper's per-layer customization.
@@ -142,6 +145,10 @@ class PackedPairBatch(NamedTuple):
     seg2: Array           # [T, NB]
     pair_mask: Array      # [T, P] 1.0 for real pair slots
     pair_index: Array     # [T, P] int32 original pair position (0 where pad)
+    edges: "PackedEdges | None" = None   # tile-local A' edge lists (§9) —
+                                         # present when packed with
+                                         # `with_edges=True`; the packed-sparse
+                                         # megakernel's input view.
 
     @property
     def node_budget(self) -> int:
@@ -152,8 +159,40 @@ class PackedPairBatch(NamedTuple):
         return self.pair_mask.shape[-1]
 
 
+class PackedEdges(NamedTuple):
+    """Packed-CSR view of a packed tile batch's *normalized* adjacency
+    (DESIGN.md §9): per tile and side, the non-zeros of A' as
+    (sender, receiver, weight) triples padded to a shared power-of-two
+    `edge_budget`, laid out in D = edge_budget / node_budget neighbor
+    *planes* (ELLPACK column-major): slot `s` of a tile holds the
+    (s // NB)-th in-edge of node `s % NB`, so summing a node's neighbors
+    is the sum of D contiguous [NB, F] planes — fully vectorizable, no
+    scatter (receivers are stored explicitly too, so the arrays are also a
+    valid plain edge list for `edge_aggregate`). Nodes with in-degree > D
+    spill their excess edges to a small COO `overflow` list — LW-GCN's
+    compressed-row format plus Accel-GCN's degree-aware split: the regular
+    rows ride the vector path, the heavy tail a tiny one-hot contraction.
+    Block-diagonality is inherited from the node packing — no edge crosses
+    graphs, so segment reductions stay exact. Pad slots carry exact-zero
+    weight/mask (neutral in aggregation).
+    """
+    edges1: EdgeBatch     # lhs CSR rows, arrays [T, NB*D]
+    edges2: EdgeBatch     # rhs CSR rows
+    overflow1: EdgeBatch  # lhs COO spill (in-degree > D), arrays [T, E_ov]
+    overflow2: EdgeBatch  # rhs COO spill
+
+    @property
+    def edge_budget(self) -> int:
+        return self.edges1.senders.shape[-1]
+
+    @property
+    def overflow_budget(self) -> int:
+        return self.overflow1.senders.shape[-1]
+
+
 def pack_pairs(pairs: Sequence[tuple], node_budget: int = 64, *,
-               slots_per_tile: int | None = None):
+               slots_per_tile: int | None = None,
+               with_edges: bool = False, edge_budget: int | None = None):
     """First-fit-decreasing packing of graph pairs into `[T, node_budget]`
     tiles. Returns (PackedPairBatch, stats).
 
@@ -163,8 +202,17 @@ def pack_pairs(pairs: Sequence[tuple], node_budget: int = 64, *,
     rhs budget. Decreasing order by total pair size keeps FFD occupancy high
     (~0.9 on AIDS-like streams vs ~0.55 for max-side bucketing).
 
+    With `with_edges=True` the result additionally carries `edges`: the
+    tile-local padded edge list of the normalized adjacency (`PackedEdges`,
+    DESIGN.md §9) that the packed-sparse megakernel aggregates from,
+    extracted by `packed_pair_edges` at a quantized `edge_budget`
+    (node_budget rows x a small neighbor-budget ladder, auto-grown to fit;
+    `kernels.ops.packed_edge_budget` is the sizing policy). stats then
+    gains the measured nnz / adjacency density per side.
+
     stats: occupancy / pad-fraction per side plus tile shape — the measured
-    quantities benchmarks/packed.py reports per policy.
+    quantities benchmarks/packed.py and benchmarks/sparse.py report per
+    policy.
     """
     sizes = [(g1["adj"].shape[0], g2["adj"].shape[0]) for g1, g2 in pairs]
     for n1, n2 in sizes:
@@ -229,7 +277,101 @@ def pack_pairs(pairs: Sequence[tuple], node_budget: int = 64, *,
         jnp.asarray(adj[1]), jnp.asarray(labels[1]), jnp.asarray(mask[1]),
         jnp.asarray(seg[1]),
         jnp.asarray(pair_mask), jnp.asarray(pair_index))
+    if with_edges:
+        edges = packed_pair_edges(packed, edge_budget)
+        packed = packed._replace(edges=edges)
+        nnz = [int(np.asarray(e.edge_mask).sum()) + int(np.asarray(o.edge_mask).sum())
+               for e, o in ((edges.edges1, edges.overflow1),
+                            (edges.edges2, edges.overflow2))]
+        adj_cells = n_tiles * node_budget * node_budget
+        stats.update(
+            edge_budget=edges.edge_budget,
+            overflow_budget=edges.overflow_budget,
+            nnz_lhs=nnz[0], nnz_rhs=nnz[1],
+            density_lhs=nnz[0] / adj_cells, density_rhs=nnz[1] / adj_cells,
+            edge_occupancy=(nnz[0] + nnz[1])
+            / max(2 * n_tiles * edges.edge_budget, 1))
     return packed, stats
+
+
+def packed_pair_edges(packed: PackedPairBatch,
+                      edge_budget: int | None = None,
+                      overflow_budget: int = 8) -> PackedEdges:
+    """Extract per-tile packed-CSR A' edge lists from a packed tile batch
+    (DESIGN.md §9).
+
+    Reuses the `to_edge_batch` non-zero extraction per side — the packed
+    adjacency is block-diagonal and the masked normalization factors per
+    graph, so each tile's A' non-zeros ARE the union of its graphs' A'
+    non-zeros — then lays the (receiver-sorted) list out in
+    D = edge_budget/node_budget ELLPACK neighbor planes (plane d, slot n =
+    node n's d-th in-edge); edges beyond a node's D slots spill to the COO
+    overflow list. Budgets are powers of two and
+    auto-grow to fit (`edge_budget=None` sizes D to the realized max
+    in-degree, leaving the overflow empty). Both sides share one budget.
+    """
+    nb = packed.node_budget
+    if edge_budget is not None and edge_budget % nb:
+        raise ValueError(f"edge_budget {edge_budget} must be a multiple of "
+                         f"node_budget {nb} (CSR rows)")
+    d_budget = (edge_budget // nb) if edge_budget else 1
+    sides = []
+    for adj, mask in ((packed.adj1, packed.mask1), (packed.adj2, packed.mask2)):
+        gb = GraphBatch(adj[..., :0], adj, mask,
+                        jnp.sum(mask, -1).astype(jnp.int32))
+        import warnings
+        with warnings.catch_warnings():   # full extraction: growth intended
+            warnings.simplefilter("ignore", RuntimeWarning)
+            coo = to_edge_batch(gb, 8)
+        snd, rcv, w = (np.asarray(coo.senders), np.asarray(coo.receivers),
+                       np.asarray(coo.weights))
+        emask = np.asarray(coo.edge_mask)
+        t = snd.shape[0]
+        # Rank of each edge within its receiver row (receivers are sorted
+        # row-major by the nonzero extraction).
+        per_tile = []
+        max_rank = 0
+        for i in range(t):
+            live = emask[i] > 0
+            r, s, ww = rcv[i, live], snd[i, live], w[i, live]
+            rank = np.arange(len(r)) - np.searchsorted(r, r, side="left")
+            per_tile.append((r, s, ww, rank))
+            if len(rank):
+                max_rank = max(max_rank, int(rank.max()) + 1)
+        sides.append((t, per_tile, max_rank))
+
+    d = max(d_budget, 1)
+    if edge_budget is None:
+        d = next_pow2(max(s[2] for s in sides), floor=2)
+    ov_need = 0
+    for t, per_tile, _ in sides:
+        for r, s, ww, rank in per_tile:
+            ov_need = max(ov_need, int(np.sum(rank >= d)))
+    e_ov = next_pow2(ov_need, floor=max(8, overflow_budget))
+
+    out = []
+    for t, per_tile, _ in sides:
+        cs = np.zeros((t, nb * d), np.int32)
+        cr = np.tile(np.tile(np.arange(nb, dtype=np.int32), d), (t, 1))
+        cw = np.zeros((t, nb * d), np.float32)
+        cm = np.zeros((t, nb * d), np.float32)
+        os_ = np.zeros((t, e_ov), np.int32)
+        or_ = np.zeros((t, e_ov), np.int32)
+        ow = np.zeros((t, e_ov), np.float32)
+        om = np.zeros((t, e_ov), np.float32)
+        for i, (r, s, ww, rank) in enumerate(per_tile):
+            fit = rank < d
+            slot = rank[fit] * nb + r[fit]      # plane-major (ELLPACK)
+            cs[i, slot], cw[i, slot], cm[i, slot] = s[fit], ww[fit], 1.0
+            n_ov = int(np.sum(~fit))
+            if n_ov:
+                os_[i, :n_ov], or_[i, :n_ov] = s[~fit], r[~fit]
+                ow[i, :n_ov], om[i, :n_ov] = ww[~fit], 1.0
+        out.append((EdgeBatch(jnp.asarray(cs), jnp.asarray(cr),
+                              jnp.asarray(cw), jnp.asarray(cm)),
+                    EdgeBatch(jnp.asarray(os_), jnp.asarray(or_),
+                              jnp.asarray(ow), jnp.asarray(om))))
+    return PackedEdges(out[0][0], out[1][0], out[0][1], out[1][1])
 
 
 def unpack_pair_scores(scores_tp, packed: PackedPairBatch,
@@ -242,26 +384,52 @@ def unpack_pair_scores(scores_tp, packed: PackedPairBatch,
     return out
 
 
+def next_pow2(n: int, floor: int = 8) -> int:
+    """Smallest power of two >= max(n, floor) — the shape-quantization helper
+    shared by overflow buckets, tile counts and edge budgets (a small, fixed
+    executable set under varying workloads). Always a true power of two,
+    even when `floor` itself is not."""
+    target = max(n, floor)
+    p = 1
+    while p < target:
+        p *= 2
+    return p
+
+
 def to_edge_batch(batch: GraphBatch, max_edges: int) -> EdgeBatch:
     """Extract the normalized-adjacency non-zeros as a padded edge list.
 
     Includes self loops (A+I) with symmetric normalization weights — i.e. the
     exact non-zero structure of A' that the paper streams to the FPGA.
     Host-side (numpy); small graphs make this negligible (paper §3.2.2).
+
+    If any graph's non-zero count exceeds `max_edges`, the whole batch's edge
+    budget auto-grows to the next power of two that fits (with a warning)
+    instead of killing the stream — the same degrade-to-padding policy as the
+    power-of-two overflow buckets of `bucket_for`. Pad edge slots carry
+    sender/receiver 0 and exact-zero weight/mask, so they are neutral in
+    every aggregation.
     """
     from repro.core.gcn import normalized_adjacency  # late import, no cycle
 
     a_norm = np.asarray(normalized_adjacency(batch.adj, batch.mask))
     bsz, n, _ = a_norm.shape
+    nonzeros = [np.nonzero(a_norm[i]) for i in range(bsz)]
+    peak = max((len(r) for r, _ in nonzeros), default=0)
+    if peak > max_edges:
+        grown = next_pow2(peak, floor=max(8, max_edges))
+        import warnings
+        warnings.warn(
+            f"{peak} non-zeros exceed max_edges={max_edges}; growing the "
+            f"edge budget to {grown} (power-of-two) instead of raising",
+            RuntimeWarning, stacklevel=2)
+        max_edges = grown
     senders = np.zeros((bsz, max_edges), np.int32)
     receivers = np.zeros((bsz, max_edges), np.int32)
     weights = np.zeros((bsz, max_edges), np.float32)
     emask = np.zeros((bsz, max_edges), np.float32)
-    for i in range(bsz):
-        r, c = np.nonzero(a_norm[i])
+    for i, (r, c) in enumerate(nonzeros):
         e = len(r)
-        if e > max_edges:
-            raise ValueError(f"{e} edges exceed max_edges={max_edges}")
         receivers[i, :e], senders[i, :e] = r, c
         weights[i, :e] = a_norm[i, r, c]
         emask[i, :e] = 1.0

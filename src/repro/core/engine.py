@@ -1,0 +1,280 @@
+"""ScoringEngine — the unified path-selection layer for SimGNN pair scoring
+(DESIGN.md §9).
+
+Five scoring paths coexist in this codebase, each fastest somewhere:
+
+  reference      pure-jnp `core.simgnn.pair_score`, bucketed; the parity
+                 anchor and the no-kernels fallback.
+  two_kernel     fused GCN+Att then fused NTN+FCN head (embeddings
+                 round-trip HBM); building blocks for embedding-only
+                 callers, benchmark comparator.
+  bucketed_mega  ONE pallas_call per size bucket (DESIGN.md §7); handles
+                 any feature kind, serves as the oversize fallback.
+  packed_dense   FFD node-packed segment-ID tiles, dense block-diagonal
+                 adjacency matmul (DESIGN.md §8); wins on dense-adjacency
+                 streams.
+  packed_sparse  packed tiles aggregated from the A' non-zero edge list
+                 (DESIGN.md §9); wins on sparse (AIDS-like) streams —
+                 the paper's own workload.
+
+Before this layer existed, the routing logic lived as ad-hoc branching
+inside `serve.batching.simgnn_query_server`. The engine makes the decision
+explicit and inspectable: `plan()` measures the workload (batch size, node
+counts, *measured* edge density, label kind) and returns a `ScorePlan`
+naming the chosen path, the pairs it covers, the oversize fallback split
+and the reason — `score()` then executes it. The serving wrapper is a thin
+shim that keeps its public `score_fn` contract.
+
+All compiled-callable caches (one per size bucket, `bucket_fns`) and packing
+statistics (`last_pack_stats`) live on the engine instance, so a serving
+process holds exactly one engine per model and every executable is reused
+across calls (the paper's 'customize per workload' principle, Table 2).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+PATHS = ("reference", "two_kernel", "bucketed_mega", "packed_dense",
+         "packed_sparse")
+PACKED_PATHS = ("packed_dense", "packed_sparse")
+
+
+@dataclass(frozen=True)
+class WorkloadStats:
+    """Measured properties of one score() call's pairs — the dispatch
+    inputs. Densities are measured from the adjacency non-zeros, never
+    assumed from the generator."""
+    n_pairs: int
+    max_nodes: int = 0
+    mean_nodes: float = 0.0
+    avg_degree: float = 0.0      # 2E/V over all graphs (self loops excluded)
+    density: float = 0.0         # nnz / sum(n_i^2)
+    has_labels: bool = True      # every graph carries int node labels
+
+
+@dataclass(frozen=True)
+class ScorePlan:
+    """An explicit, inspectable dispatch decision for one batch of pairs.
+
+    `path` scores the pairs at `fit_idx`; pairs at `over_idx` (too large for
+    the packed node budget, or the whole batch on bucketed paths) run on
+    `fallback` through power-of-two size buckets. `reason` is the
+    human-readable dispatch rationale (surfaced by examples/simgnn_search).
+    """
+    path: str
+    fallback: str
+    fit_idx: np.ndarray
+    over_idx: np.ndarray
+    stats: WorkloadStats
+    reason: str
+
+
+class ScoringEngine:
+    """Single dispatch point from graph-pair batches to scores.
+
+    path="auto" selects per call from measured workload statistics; any
+    explicit path name in `PATHS` forces that path (oversized pairs still
+    fall back to bucketed scoring — nothing kills a call). Thresholds are
+    class attributes so deployments can tune them.
+    """
+
+    #: densest stream the edge-centric kernel should take: beyond ~4
+    #: neighbors/node the edge list stops being much smaller than the dense
+    #: block and the MXU matmul wins (benchmarks/sparse.py measures the
+    #: crossover; LW-GCN/Accel-GCN report the same degree-bound regime).
+    SPARSE_MAX_DEGREE = 4.0
+    #: below this many pairs, FFD packing cannot fill even one tile enough
+    #: to beat a single bucketed launch.
+    MIN_PACK_PAIRS = 4
+
+    def __init__(self, params, cfg, *, path: str = "auto",
+                 node_budget: int | None = None,
+                 edge_budget: int | None = None):
+        if path != "auto" and path not in PATHS:
+            raise ValueError(f"unknown path {path!r}; expected 'auto' or one "
+                             f"of {PATHS}")
+        from repro.kernels.ops import packed_node_budget
+
+        self.params = params
+        self.cfg = cfg
+        self.path = path
+        self.node_budget = (packed_node_budget(cfg.max_nodes)
+                            if node_budget is None else node_budget)
+        self.edge_budget = edge_budget
+        # Bucketed-path flavor this engine instance uses (forced reference /
+        # two_kernel engines bucket through themselves; every other path
+        # falls back to the §7 megakernel).
+        self._bucket_flavor = (path if path in ("reference", "two_kernel")
+                               else "bucketed_mega")
+        self.bucket_fns: dict[int, Callable] = {}
+        self.last_pack_stats: dict | None = None
+        self.last_plan: ScorePlan | None = None
+        self._ref_fn: Callable | None = None
+
+    # ------------------------------------------------------------- planning
+
+    def workload_stats(self, pairs: Sequence[tuple], *,
+                       measure_density: bool = True) -> WorkloadStats:
+        """Measure the dispatch inputs from the raw pair dicts (host numpy).
+
+        Density measurement scans every adjacency (O(sum n_i^2)) — noise
+        next to the packing planner, but pure waste on paths that never
+        read it, so `plan()` disables it when the forced path ignores
+        density (stats then report degree/density 0).
+        """
+        if not pairs:
+            return WorkloadStats(0)
+        sizes: list[int] = []
+        nnz = 0.0
+        cells = 0.0
+        has_labels = True
+        for g1, g2 in pairs:
+            for g in (g1, g2):
+                n = g["adj"].shape[0]
+                sizes.append(n)
+                if measure_density:
+                    nnz += float(np.count_nonzero(g["adj"]))
+                    cells += n * n
+                has_labels = has_labels and "labels" in g
+        nodes = sum(sizes)
+        return WorkloadStats(
+            n_pairs=len(pairs), max_nodes=max(sizes),
+            mean_nodes=nodes / len(sizes),
+            avg_degree=nnz / max(nodes, 1), density=nnz / max(cells, 1.0),
+            has_labels=has_labels)
+
+    def _select(self, stats: WorkloadStats) -> tuple[str, str]:
+        if self.path != "auto":
+            return self.path, f"forced path={self.path}"
+        if stats.n_pairs == 0:
+            return "reference", "empty call"
+        if not stats.has_labels:
+            # The packed kernels structurally require int labels (W1 row
+            # gather); the bucketed megakernel is the dense-feats-capable
+            # slot, though today's bucketed executor still builds one-hots
+            # from labels (a dense-feats executor is ROADMAP backlog).
+            return ("bucketed_mega",
+                    "graphs without int labels cannot take a packed path")
+        if stats.n_pairs < self.MIN_PACK_PAIRS:
+            return ("bucketed_mega",
+                    f"batch of {stats.n_pairs} too small to fill packed tiles"
+                    f" (< {self.MIN_PACK_PAIRS})")
+        if stats.avg_degree <= self.SPARSE_MAX_DEGREE:
+            return ("packed_sparse",
+                    f"measured avg degree {stats.avg_degree:.2f} <= "
+                    f"{self.SPARSE_MAX_DEGREE:g}: edge list beats dense "
+                    "adjacency")
+        return ("packed_dense",
+                f"measured avg degree {stats.avg_degree:.2f} > "
+                f"{self.SPARSE_MAX_DEGREE:g}: dense MXU matmul wins")
+
+    def plan(self, pairs: Sequence[tuple]) -> ScorePlan:
+        """Measure the workload and decide — without running anything."""
+        # Density only steers the auto sparse/dense split and the sparse
+        # edge budget; forced paths that ignore it skip the O(sum n_i^2)
+        # adjacency scan.
+        stats = self.workload_stats(
+            pairs, measure_density=self.path in ("auto", "packed_sparse"))
+        path, reason = self._select(stats)
+        if path in PACKED_PATHS:
+            fits = np.asarray([max(g1["adj"].shape[0], g2["adj"].shape[0])
+                               <= self.node_budget for g1, g2 in pairs], bool)
+            fit_idx = np.flatnonzero(fits)
+            over_idx = np.flatnonzero(~fits)
+        else:
+            fit_idx = np.empty(0, np.int64)
+            over_idx = np.arange(len(pairs))
+        return ScorePlan(path=path, fallback=self._bucket_flavor,
+                         fit_idx=fit_idx, over_idx=over_idx, stats=stats,
+                         reason=reason)
+
+    # ------------------------------------------------------------ execution
+
+    def _bucket_fn(self, bucket: int) -> Callable:
+        """One cached callable per size bucket (built lazily, reused across
+        calls; XLA caches one executable per padded batch shape inside)."""
+        if bucket not in self.bucket_fns:
+            from repro.core.simgnn import pair_score
+            from repro.kernels import ops
+
+            if self._bucket_flavor == "reference":
+                if self._ref_fn is None:    # shared: jit caches per shape
+                    self._ref_fn = jax.jit(pair_score)
+                self.bucket_fns[bucket] = self._ref_fn
+            elif self._bucket_flavor == "two_kernel":
+                self.bucket_fns[bucket] = ops.simgnn_pair_score_kernel
+            else:
+                self.bucket_fns[bucket] = jax.jit(functools.partial(
+                    ops.pair_score_megakernel,
+                    block_pairs=ops.megakernel_block_pairs(bucket)))
+        return self.bucket_fns[bucket]
+
+    def _score_bucketed(self, pairs, idx: np.ndarray, out: np.ndarray):
+        from repro.core.batching import bucket_pairs
+
+        for bucket, (lhs, rhs, idxs) in bucket_pairs(
+                pairs, self.cfg.n_node_labels, allow_oversize=True).items():
+            s = self._bucket_fn(bucket)(
+                self.params, lhs.adj, lhs.feats, lhs.mask,
+                rhs.adj, rhs.feats, rhs.mask)
+            out[idx[idxs]] = np.asarray(s)
+
+    def _score_packed(self, pairs, idx: np.ndarray, out: np.ndarray,
+                      sparse: bool, stats: WorkloadStats):
+        from repro.core.batching import pack_pairs, unpack_pair_scores
+        from repro.kernels import ops
+
+        # Fixed slots_per_tile + power-of-two tile/edge quantization keep the
+        # compiled-shape set small (O(log T) executables) under varying batch
+        # sizes and FFD outcomes.
+        slots = max(8, self.node_budget // 4)
+        if sparse:
+            edge_budget = self.edge_budget
+            if edge_budget is None:
+                edge_budget = ops.packed_edge_budget(self.node_budget,
+                                                     stats.avg_degree)
+            packed, pstats = pack_pairs(pairs, self.node_budget,
+                                        slots_per_tile=slots,
+                                        with_edges=True,
+                                        edge_budget=edge_budget)
+            s = ops.pair_score_sparse(self.params, packed,
+                                      quantize_tiles=True)
+        else:
+            packed, pstats = pack_pairs(pairs, self.node_budget,
+                                        slots_per_tile=slots)
+            s = ops.pair_score_packed(self.params, packed,
+                                      quantize_tiles=True)
+        self.last_pack_stats = pstats
+        out[idx] = unpack_pair_scores(s, packed, len(pairs))
+
+    def score(self, pairs: Sequence[tuple]) -> np.ndarray:
+        """Score a batch of graph-pair dicts in original order."""
+        out = np.zeros(len(pairs), np.float32)
+        plan = self.plan(pairs)
+        self.last_plan = plan
+        # Stats describe the *latest* call only: a bucketed call must not
+        # leave a previous packed call's occupancy lying around.
+        self.last_pack_stats = None
+        if len(pairs) and not plan.stats.has_labels:
+            # Every executor today builds features from int labels
+            # (pad_graphs one-hots, packed kernels gather W1 rows); fail
+            # with the contract instead of a KeyError deep inside padding.
+            raise ValueError(
+                "graphs must carry int node labels ('labels'); a dense-"
+                "feats executor is not implemented yet (ROADMAP open item)")
+        if len(plan.fit_idx):
+            self._score_packed([pairs[i] for i in plan.fit_idx],
+                               plan.fit_idx, out,
+                               plan.path == "packed_sparse", plan.stats)
+        if len(plan.over_idx):
+            self._score_bucketed([pairs[i] for i in plan.over_idx],
+                                 plan.over_idx, out)
+        return out
+
+    __call__ = score

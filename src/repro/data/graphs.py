@@ -25,7 +25,20 @@ N_NODE_LABELS = 29
 AVG_NODES = 25.6
 
 
-def random_graph(rng: np.random.Generator, n_nodes: int | None = None) -> dict:
+def _with_density(g: dict) -> dict:
+    """Record the *realized* sparsity of a graph dict: `avg_degree` (2E/V,
+    self loops excluded) and `density` (adjacency nnz fraction) — the
+    measured quantities sparsity benchmarks and the scoring engine's
+    dispatch read instead of trusting the generator's target."""
+    n = g["adj"].shape[0]
+    nnz = float(np.count_nonzero(g["adj"]))
+    g["avg_degree"] = nnz / max(n, 1)
+    g["density"] = nnz / max(n * n, 1)
+    return g
+
+
+def random_graph(rng: np.random.Generator, n_nodes: int | None = None, *,
+                 avg_degree: float | None = None) -> dict:
     if n_nodes is None:
         n_nodes = int(np.clip(rng.normal(AVG_NODES, 8.0), 5, 64))
     # random spanning tree (connected, like chemical compounds)
@@ -34,14 +47,22 @@ def random_graph(rng: np.random.Generator, n_nodes: int | None = None) -> dict:
     for i in range(1, n_nodes):
         j = perm[rng.integers(0, i)]
         adj[perm[i], j] = adj[j, perm[i]] = 1.0
-    # sprinkle extra edges: AIDS has ~2 more edges than a tree on average
-    extra = rng.poisson(2.0)
+    if avg_degree is None:
+        # sprinkle extra edges: AIDS has ~2 more edges than a tree on average
+        extra = rng.poisson(2.0)
+    else:
+        # Degree knob for sparsity benchmarks: aim for n*d/2 total edges on
+        # top of the n-1 spanning-tree edges (a tree is already degree
+        # ~2(n-1)/n, so AIDS-like d=2.1 adds only a couple). Collisions with
+        # existing edges make the target an upper bound; the realized value
+        # is recorded below.
+        extra = max(0, int(round(n_nodes * avg_degree / 2.0)) - (n_nodes - 1))
     for _ in range(extra):
         a, b = rng.integers(0, n_nodes, 2)
         if a != b:
             adj[a, b] = adj[b, a] = 1.0
     labels = rng.integers(0, N_NODE_LABELS, n_nodes).astype(np.int32)
-    return {"adj": adj, "labels": labels}
+    return _with_density({"adj": adj, "labels": labels})
 
 
 def edit_graph(rng: np.random.Generator, g: dict, n_edits: int) -> dict:
@@ -64,7 +85,7 @@ def edit_graph(rng: np.random.Generator, g: dict, n_edits: int) -> dict:
                 adj[rr[i], cc[i]] = adj[cc[i], rr[i]] = 0.0
         else:                                      # relabel a node
             labels[rng.integers(0, n)] = rng.integers(0, N_NODE_LABELS)
-    return {"adj": adj, "labels": labels}
+    return _with_density({"adj": adj, "labels": labels})
 
 
 def ged_target(n_edits: int, n1: int, n2: int) -> float:
@@ -73,11 +94,14 @@ def ged_target(n_edits: int, n1: int, n2: int) -> float:
 
 
 def pair_stream(seed: int, batch: int, max_nodes: int = 64,
-                max_edits: int = 8) -> Iterator[dict]:
+                max_edits: int = 8,
+                avg_degree: float | None = None) -> Iterator[dict]:
     """Infinite stream of padded pair batches ready for simgnn_loss.
 
     Yields dicts with adj1/feats1/mask1, adj2/feats2/mask2, target — all numpy,
-    shaped for a single global batch (the caller shards over the mesh).
+    shaped for a single global batch (the caller shards over the mesh) — plus
+    the batch's realized `density` / `avg_degree` (mean over both sides).
+    `avg_degree` targets a degree other than the AIDS-like default (~2.1).
     """
     from repro.core.batching import pad_graphs
 
@@ -85,7 +109,7 @@ def pair_stream(seed: int, batch: int, max_nodes: int = 64,
     while True:
         g1s, g2s, targets = [], [], []
         for _ in range(batch):
-            g1 = random_graph(rng)
+            g1 = random_graph(rng, avg_degree=avg_degree)
             k = int(rng.integers(0, max_edits + 1))
             g2 = edit_graph(rng, g1, k)
             g1s.append(g1)
@@ -93,10 +117,13 @@ def pair_stream(seed: int, batch: int, max_nodes: int = 64,
             targets.append(ged_target(k, g1["adj"].shape[0], g2["adj"].shape[0]))
         b1 = pad_graphs(g1s, N_NODE_LABELS, max_nodes)
         b2 = pad_graphs(g2s, N_NODE_LABELS, max_nodes)
+        gs = g1s + g2s
         yield {
             "adj1": b1.adj, "feats1": b1.feats, "mask1": b1.mask,
             "adj2": b2.adj, "feats2": b2.feats, "mask2": b2.mask,
             "target": np.asarray(targets, np.float32),
+            "density": float(np.mean([g["density"] for g in gs])),
+            "avg_degree": float(np.mean([g["avg_degree"] for g in gs])),
         }
 
 
@@ -130,10 +157,15 @@ def query_pairs(seed: int, n_pairs: int) -> list[tuple[dict, dict]]:
     return out
 
 
-def search_pairs(seed: int, n_pairs: int) -> list[tuple[dict, dict]]:
+def search_pairs(seed: int, n_pairs: int,
+                 avg_degree: float | None = None) -> list[tuple[dict, dict]]:
     """Similarity-*search* pair stream: query and database graph sizes are
     independent draws (query_pairs' edit-pairs always share a node count,
     which understates the pair-max bucketing cost a real search workload
-    pays — the paper pairs 10,000 *random* compounds). No GED labels."""
+    pays — the paper pairs 10,000 *random* compounds). No GED labels.
+    `avg_degree` targets a non-default degree (AIDS-like ~2.1 otherwise);
+    each graph dict carries its realized `density` / `avg_degree`."""
     rng = np.random.default_rng(seed)
-    return [(random_graph(rng), random_graph(rng)) for _ in range(n_pairs)]
+    return [(random_graph(rng, avg_degree=avg_degree),
+             random_graph(rng, avg_degree=avg_degree))
+            for _ in range(n_pairs)]

@@ -5,15 +5,20 @@ padding to block multiples, parameter plumbing from the core/ model param
 trees, and the interpret-mode fallback (DESIGN.md §2 — kernels compile with
 Mosaic on TPU, run emulated elsewhere).
 
-For SimGNN pair scoring there are three kernel paths:
+For SimGNN pair scoring there are four kernel paths (path selection lives in
+`core.engine.ScoringEngine`, DESIGN.md §9):
 
+  * `pair_score_sparse` — the edge-centric packed-sparse megakernel
+    (DESIGN.md §9): packed tiles aggregated from the A' non-zero edge list
+    (in-kernel segment sum) instead of the dense adjacency matmul; the
+    engine's choice for sparse (AIDS-like) streams.
   * `pair_score_packed` — the packed-pair megakernel (DESIGN.md §8): many
     variable-size pairs share fixed node-budget tiles (segment IDs), the
     first layer gathers W1 rows from int32 labels instead of multiplying
-    one-hots; the serving default for one-hot-labelled graphs.
+    one-hots; the engine's choice for dense-adjacency streams.
   * `pair_score_megakernel` — ONE pallas_call per bucket-padded pair batch
     (DESIGN.md §7); the dense-feats path, kept for non-one-hot inputs and
-    as the bucketed fallback.
+    as the bucketed fallback for oversized pairs.
   * `simgnn_pair_score_kernel` — the two-kernel composition (fused GCN+Att,
     then fused NTN+FCN head) kept as building blocks for embedding-only /
     head-only callers and as the benchmark comparison point.
@@ -29,12 +34,14 @@ from repro.kernels.fused_gcn import fused_gcn_att
 from repro.kernels.fused_pair import fused_pair_score
 from repro.kernels.packed_pair import packed_pair_score
 from repro.kernels.simgnn_head import simgnn_head
+from repro.kernels.sparse_pair import sparse_pair_score
 from repro.kernels.wkv6 import wkv6
 
 __all__ = ["flash_attention", "wkv6", "graph_embeddings_fused",
            "pair_scores_fused", "simgnn_pair_score_kernel",
            "pair_score_megakernel", "megakernel_block_pairs",
-           "pair_score_packed", "packed_node_budget", "packed_tile_block"]
+           "pair_score_packed", "packed_node_budget", "packed_tile_block",
+           "pair_score_sparse", "packed_edge_budget", "sparse_tile_block"]
 
 
 def _pad_batch(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
@@ -138,22 +145,14 @@ def packed_tile_block(node_budget: int) -> int:
     return max(1, min(16, 1024 // max(node_budget, 1)))
 
 
-def pair_score_packed(params, packed, *, tile_block: int | None = None,
-                      quantize_tiles: bool = False,
-                      interpret: bool | None = None) -> jax.Array:
-    """Score a `core.batching.PackedPairBatch` in ONE pallas_call
-    (DESIGN.md §8): [T, P] pair-slot scores, zero at pad slots. Pads T to a
-    tile_block multiple (pad tiles carry all-zero masks; `pair_mask` zeroes
-    their slots). Use `core.batching.unpack_pair_scores` to restore the
-    original pair order.
+def _tile_pad_plan(t: int, tile_block: int,
+                   quantize_tiles: bool) -> tuple[int, int]:
+    """Shared tile-count padding policy for the packed megakernels: returns
+    (target_tiles, tile_block) with target a tile_block multiple >= t.
 
-    `quantize_tiles` additionally rounds T up to the next power of two so a
-    serving loop with varying batch sizes compiles O(log T) executables
-    instead of one per tile count (the 'small, fixed set of shapes'
-    principle; pair it with a fixed planner `slots_per_tile`)."""
-    if tile_block is None:
-        tile_block = packed_tile_block(packed.node_budget)
-    t = packed.adj1.shape[0]
+    `quantize_tiles` rounds T up to the next power of two so a serving loop
+    with varying batch sizes compiles O(log T) executables instead of one
+    per tile count (the 'small, fixed set of shapes' principle)."""
     target = t
     if quantize_tiles:
         target = 1
@@ -166,12 +165,91 @@ def pair_score_packed(params, packed, *, tile_block: int | None = None,
            and (-(-target // tile_block) * tile_block - target) * 8 > target):
         tile_block //= 2
     # target is a tile_block multiple >= t, so padding to `target` lands on it.
-    target = -(-target // tile_block) * tile_block
+    return -(-target // tile_block) * tile_block, tile_block
+
+
+def pair_score_packed(params, packed, *, tile_block: int | None = None,
+                      quantize_tiles: bool = False,
+                      interpret: bool | None = None) -> jax.Array:
+    """Score a `core.batching.PackedPairBatch` in ONE pallas_call
+    (DESIGN.md §8): [T, P] pair-slot scores, zero at pad slots. Pads T to a
+    tile_block multiple (pad tiles carry all-zero masks; `pair_mask` zeroes
+    their slots). Use `core.batching.unpack_pair_scores` to restore the
+    original pair order. See `_tile_pad_plan` for `quantize_tiles`."""
+    if tile_block is None:
+        tile_block = packed_tile_block(packed.node_budget)
+    t = packed.adj1.shape[0]
+    target, tile_block = _tile_pad_plan(t, tile_block, quantize_tiles)
     arrays = [_pad_batch(x, target)[0]
               for x in (packed.adj1, packed.labels1, packed.mask1, packed.seg1,
                         packed.adj2, packed.labels2, packed.mask2, packed.seg2,
                         packed.pair_mask)]
     out = packed_pair_score(*arrays, params["gcn"], params["att"]["w"],
+                            params["ntn"], params["fcn"],
+                            tile_block=tile_block, interpret=interpret)
+    return out[:t]
+
+
+def sparse_tile_block(node_budget: int) -> int:
+    """Tiles-per-program policy for the packed-sparse megakernel. The sparse
+    tile's VMEM working set drops the [NB, NB] adjacency and A' blocks
+    entirely (edge lists are ~3·E words, ~3 KB at E=256, vs 16 KB+16 KB of
+    fp32 adjacency at NB=64), leaving activations as the footprint
+    (~35 KB/tile side) — so about twice as many tiles fit the same ~2 MB
+    program budget as `packed_tile_block` allows the dense kernel."""
+    return max(1, min(32, 2048 // max(node_budget, 1)))
+
+
+def packed_edge_budget(node_budget: int, avg_degree: float | None = None) -> int:
+    """Packed-CSR edge budget per tile side: node_budget receiver rows times
+    a per-node neighbor budget D from a small quantized ladder (4/6/8/12/16
+    ... — O(log) distinct compiled shapes, like the power-of-two tile
+    counts) sized to cover ~p75 of the in-degree distribution (self loop
+    included) — D=4 at AIDS-like degree ~2.1, so NB·D = 256 slots vs the
+    4096-entry dense block at NB=64. The tail beyond D spills to the small
+    COO overflow list (degree-aware split), so a modest D never loses
+    edges; `packed_pair_edges` also auto-grows if a whole stream outruns
+    the budget."""
+    d = 2.5 if avg_degree is None else avg_degree
+    need = int(round(d)) + 2               # ~p75 of molecule-like streams;
+    for per_node in (4, 6, 8, 12, 16, 24, 32, 48, 64):   # tail -> overflow
+        if per_node >= need:
+            return node_budget * per_node
+    return node_budget * node_budget       # degenerate: fully dense rows
+
+
+def pair_score_sparse(params, packed, *, tile_block: int | None = None,
+                      quantize_tiles: bool = False,
+                      interpret: bool | None = None) -> jax.Array:
+    """Score a `core.batching.PackedPairBatch` through the edge-centric
+    packed-sparse megakernel (DESIGN.md §9): aggregation runs from the
+    tile-local A' edge list (in-kernel segment sum) instead of the dense
+    block-diagonal adjacency matmul. Same [T, P] output contract, tile
+    padding and `quantize_tiles` policy as `pair_score_packed`.
+
+    Expects `packed.edges` (pack with `with_edges=True`); when absent, the
+    edge lists are extracted here at the default `packed_edge_budget`."""
+    from repro.core.batching import packed_pair_edges
+
+    edges = packed.edges
+    if edges is None:
+        edges = packed_pair_edges(packed,
+                                  packed_edge_budget(packed.node_budget))
+    if tile_block is None:
+        tile_block = sparse_tile_block(packed.node_budget)
+    t = packed.mask1.shape[0]
+    target, tile_block = _tile_pad_plan(t, tile_block, quantize_tiles)
+    e1, e2 = edges.edges1, edges.edges2
+    o1, o2 = edges.overflow1, edges.overflow2
+    arrays = [_pad_batch(x, target)[0]
+              for x in (e1.senders, e1.weights,
+                        o1.senders, o1.receivers, o1.weights,
+                        packed.labels1, packed.mask1, packed.seg1,
+                        e2.senders, e2.weights,
+                        o2.senders, o2.receivers, o2.weights,
+                        packed.labels2, packed.mask2, packed.seg2,
+                        packed.pair_mask)]
+    out = sparse_pair_score(*arrays, params["gcn"], params["att"]["w"],
                             params["ntn"], params["fcn"],
                             tile_block=tile_block, interpret=interpret)
     return out[:t]

@@ -9,29 +9,23 @@ OpenCL/PCIe setup (2.8x E2E there). The TPU analogues implemented here:
     `stats` record every flush (size- vs deadline-triggered, occupancy) so
     benchmarks report *measured* batch occupancy;
   * `simgnn_query_server` — the paper's exact workload: a stream of graph
-    pairs scored in fused batches. `use_kernels=True` routes by default
-    through the packed-pair megakernel (kernels/packed_pair.py, DESIGN.md
-    §8): pairs are FFD-packed into node-budget tiles with segment IDs and
-    first-layer label gather. Size-bucketing (core/batching.py, one cached
-    executable per bucket through kernels/fused_pair.py) remains the
-    reference path and the fallback for pairs beyond the node budget;
-    oversized queries get power-of-two overflow buckets instead of killing
-    the call.
+    pairs scored in fused batches. Since DESIGN.md §9, this is a thin
+    wrapper over `core.engine.ScoringEngine`: ALL path selection
+    (reference / two-kernel / bucketed-mega / packed-dense / packed-sparse,
+    plus the oversize fallback split) lives in the engine's `plan()`; the
+    wrapper only maps the legacy `use_kernels`/`packing` flags onto an
+    engine path and keeps the public score_fn attribute contract.
 
 benchmarks/fig11.py sweeps `max_batch` to reproduce the paper's batching
-curve on this implementation; benchmarks/packed.py compares the packed,
-bucketed-megakernel and two-kernel scoring policies.
+curve on this implementation; benchmarks/packed.py and benchmarks/sparse.py
+compare the scoring paths head-to-head.
 """
 
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
 from typing import Callable
-
-import jax
-import numpy as np
 
 
 @dataclass
@@ -113,75 +107,39 @@ class MicroBatcher:
 
 
 def simgnn_query_server(params, cfg, *, use_kernels: bool = False,
-                        packing: bool = True, node_budget: int | None = None):
+                        packing: bool = True, node_budget: int | None = None,
+                        path: str | None = None):
     """Returns score_fn(list[(g1, g2)]) -> np.ndarray of similarity scores.
 
-    `use_kernels=True` routes by default through the packed-pair megakernel
-    (DESIGN.md §8): each call's pairs are FFD-packed into `[T, node_budget]`
-    segment-ID tiles (host-side, O(B log B)) and scored in ONE pallas_call
-    with first-layer label gather; `score_fn.last_pack_stats` exposes the
-    measured occupancy. Pairs with a graph beyond the node budget — and the
-    whole stream when `packing=False` or `use_kernels=False` — take the
-    bucketed path: one jitted callable per size bucket in
-    `score_fn.bucket_fns` (built lazily, reused across calls — the paper's
-    'customize per workload' principle, Table 2; XLA caches one executable
-    per padded batch shape inside each callable), with power-of-two overflow
-    buckets for queries beyond the largest standard bucket, so an oversized
-    graph degrades to extra padding instead of a ValueError.
+    A thin wrapper over `core.engine.ScoringEngine` (DESIGN.md §9) — no path
+    selection happens here. The legacy flags map onto an engine path:
+    `use_kernels=False` -> "reference"; `use_kernels=True, packing=False` ->
+    "bucketed_mega"; `use_kernels=True, packing=True` -> "auto" (the engine
+    measures each call's density and picks packed-sparse or packed-dense,
+    with the bucketed fallback for oversized pairs). An explicit `path`
+    overrides the flags.
+
+    Public contract kept from the pre-engine server: the returned score_fn
+    exposes `bucket_fns` (the engine's per-bucket callable cache),
+    `last_pack_stats` (measured packing occupancy of the latest call),
+    `node_budget`, and — new — `last_plan` and `engine`.
     """
-    from repro.core.batching import (bucket_pairs, pack_pairs,
-                                     unpack_pair_scores)
-    from repro.core.simgnn import pair_score
-    from repro.kernels.ops import (megakernel_block_pairs, packed_node_budget,
-                                   pair_score_megakernel, pair_score_packed)
+    from repro.core.engine import ScoringEngine
 
-    if node_budget is None:
-        node_budget = packed_node_budget(cfg.max_nodes)
-    bucket_fns: dict[int, Callable] = {}
-    ref_fn = None if use_kernels else jax.jit(pair_score)
-
-    def fn_for(bucket: int) -> Callable:
-        if bucket not in bucket_fns:
-            if use_kernels:
-                bucket_fns[bucket] = jax.jit(functools.partial(
-                    pair_score_megakernel,
-                    block_pairs=megakernel_block_pairs(bucket)))
-            else:
-                bucket_fns[bucket] = ref_fn     # shared: jit caches per shape
-        return bucket_fns[bucket]
-
-    def score_bucketed(pairs, idx, out):
-        for bucket, (lhs, rhs, idxs) in bucket_pairs(
-                pairs, cfg.n_node_labels, allow_oversize=True).items():
-            s = fn_for(bucket)(params, lhs.adj, lhs.feats, lhs.mask,
-                               rhs.adj, rhs.feats, rhs.mask)
-            out[idx[idxs]] = np.asarray(s)
+    if path is None:
+        path = (("auto" if packing else "bucketed_mega") if use_kernels
+                else "reference")
+    engine = ScoringEngine(params, cfg, path=path, node_budget=node_budget)
 
     def score(pairs):
-        out = np.zeros(len(pairs), np.float32)
-        if not (use_kernels and packing):
-            score_bucketed(pairs, np.arange(len(pairs)), out)
-            return out
-        fits = np.asarray([max(g1["adj"].shape[0], g2["adj"].shape[0])
-                           <= node_budget for g1, g2 in pairs], bool)
-        fit_idx = np.flatnonzero(fits)
-        if len(fit_idx):
-            # Fixed slots_per_tile + power-of-two tile quantization keep the
-            # compiled-shape set small (O(log T) executables) under varying
-            # batch sizes and FFD outcomes.
-            packed, stats = pack_pairs([pairs[i] for i in fit_idx],
-                                       node_budget,
-                                       slots_per_tile=max(8, node_budget // 4))
-            score.last_pack_stats = stats
-            s = pair_score_packed(params, packed, quantize_tiles=True)
-            out[fit_idx] = unpack_pair_scores(s, packed, len(fit_idx))
-        over_idx = np.flatnonzero(~fits)
-        if len(over_idx):
-            # Oversized pairs: padded bucket fallback (power-of-two buckets).
-            score_bucketed([pairs[i] for i in over_idx], over_idx, out)
+        out = engine.score(pairs)
+        score.last_pack_stats = engine.last_pack_stats
+        score.last_plan = engine.last_plan
         return out
 
-    score.bucket_fns = bucket_fns
+    score.engine = engine
+    score.bucket_fns = engine.bucket_fns       # same dict object: live view
     score.last_pack_stats = None
-    score.node_budget = node_budget
+    score.last_plan = None
+    score.node_budget = engine.node_budget
     return score

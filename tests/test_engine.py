@@ -1,0 +1,217 @@
+"""ScoringEngine (core/engine.py, DESIGN.md §9) tests: every path is
+selectable and correct through the single dispatch point, auto dispatch
+follows the measured workload statistics, oversized pairs split to the
+bucketed fallback, and the serving wrapper keeps its public contract while
+containing no path selection of its own.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.batching import bucket_pairs
+from repro.core.engine import PATHS, ScoringEngine
+from repro.core.simgnn import SimGNNConfig, init_simgnn_params, pair_score
+from repro.data.graphs import random_graph, search_pairs
+from repro.serve.batching import simgnn_query_server
+
+CFG = SimGNNConfig()
+PARAMS = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+
+
+def _mixed_pairs(seed, n_pairs, max_n=64, avg_degree=None):
+    rng = np.random.default_rng(seed)
+    return [(random_graph(rng, int(rng.integers(5, max_n + 1)),
+                          avg_degree=avg_degree),
+             random_graph(rng, int(rng.integers(5, max_n + 1)),
+                          avg_degree=avg_degree))
+            for _ in range(n_pairs)]
+
+
+def _reference_scores(params, pairs):
+    out = np.zeros(len(pairs), np.float32)
+    for b, (lhs, rhs, idxs) in bucket_pairs(pairs, CFG.n_node_labels,
+                                            allow_oversize=True).items():
+        out[idxs] = np.asarray(pair_score(params, lhs.adj, lhs.feats,
+                                          lhs.mask, rhs.adj, rhs.feats,
+                                          rhs.mask))
+    return out
+
+
+# ------------------------------------------------------------ forced paths
+
+@pytest.mark.parametrize("path,atol", [
+    ("reference", 1e-6), ("two_kernel", 2e-5), ("bucketed_mega", 2e-5),
+    ("packed_dense", 1e-6), ("packed_sparse", 1e-6)])
+def test_every_path_scores_through_engine(path, atol):
+    pairs = _mixed_pairs(0, 12)
+    engine = ScoringEngine(PARAMS, CFG, path=path)
+    out = engine.score(pairs)
+    np.testing.assert_allclose(out, _reference_scores(PARAMS, pairs),
+                               rtol=0, atol=atol)
+    assert engine.last_plan.path == path
+    assert engine.last_plan.reason.startswith("forced")
+
+
+def test_unknown_path_rejected():
+    with pytest.raises(ValueError, match="unknown path"):
+        ScoringEngine(PARAMS, CFG, path="warp-drive")
+
+
+# ------------------------------------------------------------ auto dispatch
+
+def test_auto_picks_sparse_on_aids_like_stream():
+    engine = ScoringEngine(PARAMS, CFG)
+    pairs = _mixed_pairs(1, 16)              # molecule-like degree ~2.1
+    plan = engine.plan(pairs)
+    assert plan.path == "packed_sparse"
+    assert plan.stats.avg_degree <= ScoringEngine.SPARSE_MAX_DEGREE
+    out = engine.score(pairs)
+    np.testing.assert_allclose(out, _reference_scores(PARAMS, pairs),
+                               rtol=0, atol=1e-6)
+    assert engine.last_pack_stats is not None
+    assert engine.last_pack_stats["edge_budget"] > 0
+
+
+def test_auto_picks_dense_on_dense_stream():
+    engine = ScoringEngine(PARAMS, CFG)
+    pairs = _mixed_pairs(2, 8, max_n=32, avg_degree=10.0)
+    plan = engine.plan(pairs)
+    assert plan.stats.avg_degree > ScoringEngine.SPARSE_MAX_DEGREE
+    assert plan.path == "packed_dense"
+    out = engine.score(pairs)
+    np.testing.assert_allclose(out, _reference_scores(PARAMS, pairs),
+                               rtol=0, atol=1e-6)
+
+
+def test_auto_buckets_tiny_batches():
+    engine = ScoringEngine(PARAMS, CFG)
+    pairs = _mixed_pairs(3, ScoringEngine.MIN_PACK_PAIRS - 1)
+    plan = engine.plan(pairs)
+    assert plan.path == "bucketed_mega"
+    assert len(plan.fit_idx) == 0 and len(plan.over_idx) == len(pairs)
+
+
+def test_auto_buckets_label_free_graphs():
+    engine = ScoringEngine(PARAMS, CFG)
+    pairs = _mixed_pairs(4, 6)
+    pairs = [({"adj": g1["adj"]}, g2) for g1, g2 in pairs]  # drop labels
+    plan = engine.plan(pairs)
+    assert not plan.stats.has_labels
+    assert plan.path == "bucketed_mega"
+    # execution requires labels today: a clear contract error, not a
+    # KeyError deep inside padding
+    with pytest.raises(ValueError, match="int node labels"):
+        engine.score(pairs)
+
+
+def test_last_pack_stats_reset_on_bucketed_call():
+    """Stats must describe the latest call: a bucketed (tiny) call after a
+    packed one clears the stale packed stats."""
+    engine = ScoringEngine(PARAMS, CFG)
+    engine.score(_mixed_pairs(8, 12))
+    assert engine.last_pack_stats is not None
+    engine.score(_mixed_pairs(9, 2))         # < MIN_PACK_PAIRS -> bucketed
+    assert engine.last_plan.path == "bucketed_mega"
+    assert engine.last_pack_stats is None
+
+
+def test_forced_paths_skip_density_measurement():
+    engine = ScoringEngine(PARAMS, CFG, path="reference")
+    plan = engine.plan(_mixed_pairs(10, 4))
+    assert plan.stats.avg_degree == 0.0      # scan skipped
+    assert plan.stats.n_pairs == 4
+
+
+def test_empty_call():
+    engine = ScoringEngine(PARAMS, CFG)
+    out = engine.score([])
+    assert out.shape == (0,)
+
+
+def test_workload_stats_measured():
+    engine = ScoringEngine(PARAMS, CFG)
+    pairs = _mixed_pairs(5, 10)
+    st = engine.workload_stats(pairs)
+    nnz = sum(np.count_nonzero(g["adj"]) for p in pairs for g in p)
+    nodes = sum(g["adj"].shape[0] for p in pairs for g in p)
+    assert st.n_pairs == 10
+    assert st.avg_degree == pytest.approx(nnz / nodes)
+    assert st.max_nodes == max(g["adj"].shape[0] for p in pairs for g in p)
+    assert st.has_labels
+
+
+# ------------------------------------------------------- oversize fallback
+
+def test_packed_paths_split_oversized_pairs():
+    rng = np.random.default_rng(13)
+    pairs = _mixed_pairs(6, 6) + [(random_graph(rng, 90),
+                                   random_graph(rng, 20))]
+    for path in ("packed_sparse", "packed_dense"):
+        engine = ScoringEngine(PARAMS, CFG, path=path)
+        plan = engine.plan(pairs)
+        assert len(plan.fit_idx) == 6 and list(plan.over_idx) == [6]
+        assert plan.fallback == "bucketed_mega"
+        out = engine.score(pairs)
+        np.testing.assert_allclose(out, _reference_scores(PARAMS, pairs),
+                                   rtol=1e-4, atol=2e-5)
+        assert 128 in engine.bucket_fns     # oversize bucket compiled
+
+
+# ------------------------------------------------------- serving wrapper
+
+def test_server_is_thin_wrapper_with_contract():
+    pairs = _mixed_pairs(7, 12)
+    score = simgnn_query_server(PARAMS, CFG, use_kernels=True)
+    assert score.engine.path == "auto"
+    assert score.bucket_fns is score.engine.bucket_fns
+    assert score.last_pack_stats is None and score.last_plan is None
+    out = score(pairs)
+    np.testing.assert_allclose(out, _reference_scores(PARAMS, pairs),
+                               rtol=0, atol=1e-6)
+    assert score.last_plan.path == "packed_sparse"
+    assert score.last_pack_stats["n_pairs"] == 12
+    assert score.node_budget == score.engine.node_budget
+
+
+def test_server_flag_to_path_mapping():
+    assert simgnn_query_server(PARAMS, CFG).engine.path == "reference"
+    assert simgnn_query_server(PARAMS, CFG,
+                               use_kernels=True).engine.path == "auto"
+    assert simgnn_query_server(
+        PARAMS, CFG, use_kernels=True,
+        packing=False).engine.path == "bucketed_mega"
+    assert simgnn_query_server(
+        PARAMS, CFG, path="two_kernel").engine.path == "two_kernel"
+
+
+def test_server_no_direct_path_branching():
+    """The refactor contract: serve/batching.py must not name or branch on
+    scoring paths — that logic lives only in core/engine.py."""
+    import ast
+    import inspect
+    import repro.serve.batching as sb
+    tree = ast.parse(inspect.getsource(sb.simgnn_query_server))
+    for node in ast.walk(tree):            # drop docstrings: code only
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if (node.body and isinstance(node.body[0], ast.Expr)
+                    and isinstance(node.body[0].value, ast.Constant)):
+                node.body = node.body[1:]
+    src = ast.unparse(tree)
+    for needle in ("pack_pairs", "bucket_pairs", "pair_score_packed",
+                   "pair_score_sparse", "pair_score_megakernel",
+                   "fits", "oversize"):
+        assert needle not in src, f"path selection leaked into serve: {needle}"
+
+
+def test_engine_paths_registry():
+    assert set(PATHS) == {"reference", "two_kernel", "bucketed_mega",
+                          "packed_dense", "packed_sparse"}
+
+
+def test_search_pairs_degree_knob_changes_dispatch():
+    engine = ScoringEngine(PARAMS, CFG)
+    sparse_stream = search_pairs(1, 8, avg_degree=2.1)
+    dense_stream = search_pairs(1, 8, avg_degree=12.0)
+    assert engine.plan(sparse_stream).path == "packed_sparse"
+    assert engine.plan(dense_stream).path == "packed_dense"
