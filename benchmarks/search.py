@@ -1,0 +1,246 @@
+"""1-vs-N similarity search: embedding-cached vs full-rescoring policies
+(DESIGN.md §10).
+
+The workload is the paper's end use: queries scored against a recurring
+corpus (`data.graphs.zipf_query_stream` — Zipf-skewed picks over a fixed
+corpus, fresh query graph per batch). Policies (see `_rotate` for which
+batches each cycles):
+
+  cached_warm    — `ScoringEngine` embedding-cached path with the corpus
+                   pre-indexed (`serve.search.SimilaritySearchServer`): per
+                   call, one query-side embedding miss plus the fused
+                   NTN+FCN head; corpus embeddings never recompute.
+  cached_cold    — same path with the cache cleared before every call: the
+                   worst case (pays hashing AND every embedding) bounding
+                   the cache's downside.
+  uncached_sparse— packed-CSR sparse path (the engine's best full-rescoring
+                   policy on this AIDS-like stream) recomputing both sides'
+                   GCN+Att every call.
+  two_kernel     — per-bucket fused GCN+Att then fused head (the §7-era
+                   baseline).
+
+Emits one `BENCH {json}` line per policy with measured cache hit rate and
+the warm path's per-stage seconds (query embed / head / hashing overhead).
+On this CPU-only container kernels run in interpret mode — numbers are the
+trajectory baseline, not TPU times.
+
+Usage:  PYTHONPATH=src python benchmarks/search.py [--tiny] [--check]
+            [--batch 512] [--corpus 256] [--out search_bench.json]
+
+`--check` (CI gate): non-zero exit if the fused head drifts >1e-6 from the
+reference NTN+FCN on identical embeddings, if warm cached end-to-end scores
+drift >1e-6 from the reference scorer, or if the warm cached policy is not
+>= 5x faster than uncached packed-sparse.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/search.py` support
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import time_fn
+from repro.configs.simgnn_aids import CONFIG as CFG
+from repro.core.engine import ScoringEngine
+from repro.core.simgnn import fcn_head, init_simgnn_params, ntn_scores
+from repro.data.graphs import random_graph, zipf_corpus, zipf_query_stream
+from repro.serve.search import SimilaritySearchServer
+
+PARITY_BOUND = 1e-6
+SPEEDUP_BOUND = 5.0
+
+
+def _rotate(batches, fn):
+    """Step fn through pre-built batches, wrapping around.
+
+    The warm policy gets warmup+iters distinct batches so every timed call
+    sees a query the cache has never held (a repeated query would hit and
+    flatter the warm numbers to head-only). The cache-less policies cycle
+    the warmup batches instead: repeats cannot flatter a policy with no
+    cache, and recurring shapes let trace/compile amortize the way a
+    steady-state deployment would — fresh batches there would bill jit
+    retracing (per novel bucket/miss-count composition) as per-call cost."""
+    state = {"i": 0}
+
+    def call():
+        b = batches[state["i"] % len(batches)]
+        state["i"] += 1
+        return fn(b)
+    return call
+
+
+def run(batch: int = 512, n_corpus: int = 256, n_query_batches: int = 4,
+        iters: int = 8, seed: int = 71, cache_size: int = 4096):
+    params = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+    stream = zipf_query_stream(seed, batch, n_corpus=n_corpus)
+    # warmup runs n_query_batches calls, timing runs iters more: one
+    # distinct batch per call so no timed query is ever resident already.
+    batches = [next(stream) for _ in range(n_query_batches + iters)]
+    corpus = zipf_corpus(seed, n_corpus)
+    mean_unique = float(np.mean([b["unique_frac"] for b in batches]))
+
+    # ---------------------------------------------------------- the policies
+    server = SimilaritySearchServer(params, CFG, cache_size=cache_size)
+    t0 = time.perf_counter()
+    server.index(corpus)
+    index_seconds = time.perf_counter() - t0
+    warm = server.engine
+
+    cold = ScoringEngine(params, CFG, path="embedding_cache",
+                         cache_size=cache_size)
+    sparse = ScoringEngine(params, CFG, path="packed_sparse")
+    twok = ScoringEngine(params, CFG, path="two_kernel")
+
+    def run_cold(b):
+        # Genuinely cold: drop the LRU AND the per-dict `graph_key` memos,
+        # so every call re-pays WL hashing like a client with fresh dicts.
+        cold.cache.clear()
+        for g1, g2 in b["pairs"]:
+            g1.pop("_graph_key", None)
+            g2.pop("_graph_key", None)
+        return cold.score(b["pairs"])
+
+    rep_batches = batches[:n_query_batches]   # cycled by cache-less policies
+    policies = {
+        "cached_warm": _rotate(batches, lambda b: warm.score(b["pairs"])),
+        "cached_cold": _rotate(rep_batches, run_cold),
+        "uncached_sparse": _rotate(rep_batches,
+                                   lambda b: sparse.score(b["pairs"])),
+        "two_kernel": _rotate(rep_batches, lambda b: twok.score(b["pairs"])),
+    }
+
+    # Pre-warm the query-side embed executables for every size bucket so no
+    # timed call pays compilation (fresh queries land in arbitrary buckets).
+    rng = np.random.default_rng(seed + 1)
+    for n in (6, 12, 24, 48):
+        warm.embed_graphs([random_graph(rng, n)])
+        cold.embed_graphs([random_graph(rng, n)])
+
+    # --------------------------------------------------------- timed sweep
+    warm.cache.hits = warm.cache.misses = 0     # count the timed phase only
+    records, seconds = [], {}
+    warmup = n_query_batches
+    for name, fn in policies.items():
+        seconds[name] = time_fn(fn, warmup=warmup, iters=iters)
+    hit_stats = warm.cache.stats()
+
+    # ------------------------------------------------------------- parity
+    # After the sweep on purpose: the parity embeds would otherwise make the
+    # timed batches' queries resident and turn the warm timing head-only.
+    ref = ScoringEngine(params, CFG, path="reference")
+    s_ref = ref.score(batches[0]["pairs"])
+    s_warm = warm.score(batches[0]["pairs"])
+    e2e_parity = float(np.max(np.abs(s_warm - s_ref)))
+    # Head-stage parity: fused head kernel vs reference NTN+FCN on the SAME
+    # embeddings (isolates the per-query hot stage from the embed flavor).
+    emb_q = warm.embed_graphs([b["pairs"][0][0] for b in batches])
+    emb_c = warm.embed_graphs(corpus)
+    h1 = np.repeat(emb_q, -(-len(emb_c) // len(emb_q)), 0)[: len(emb_c)]
+    h2 = emb_c
+    head_kernel = warm.pair_scores_from_embeddings(h1, h2)
+    head_ref = np.asarray(fcn_head(params["fcn"], ntn_scores(
+        params["ntn"], h1.astype(np.float32), h2.astype(np.float32))))
+    head_parity = float(np.max(np.abs(head_kernel - head_ref)))
+
+    # Per-stage split of the warm service call (embed query / head / sort),
+    # measured through the server on queries the cache has never seen (the
+    # timed batches' queries are resident by now and would flatter embed).
+    server.stats.embed_seconds = server.stats.head_seconds = 0.0
+    server.stats.topk_seconds = 0.0
+    server.stats.queries = 0
+    for _ in range(n_query_batches):
+        server.topk(next(stream)["query"], k=10)
+    q = max(server.stats.queries, 1)
+    stage = {"embed_s_per_query": server.stats.embed_seconds / q,
+             "head_s_per_query": server.stats.head_seconds / q,
+             "topk_s_per_query": server.stats.topk_seconds / q}
+
+    for name in policies:
+        rec = {"bench": "search", "stream": "zipf", "batch": batch,
+               "n_corpus": n_corpus, "policy": name,
+               "mean_unique_frac": round(mean_unique, 4),
+               "seconds_per_call": round(seconds[name], 6),
+               "us_per_pair": round(1e6 * seconds[name] / batch, 3),
+               "pairs_per_s": round(batch / seconds[name], 1)}
+        if name == "cached_warm":
+            rec.update(cache=hit_stats, hit_rate=hit_stats["hit_rate"],
+                       index_seconds=round(index_seconds, 6),
+                       head_parity=head_parity, e2e_parity=e2e_parity,
+                       **{k: round(v, 6) for k, v in stage.items()})
+        records.append(rec)
+        print("BENCH " + json.dumps(rec))
+
+    summary = {"bench": "search", "stream": "zipf", "batch": batch,
+               "policy": "summary", "n_corpus": n_corpus,
+               "hit_rate": hit_stats["hit_rate"],
+               "head_parity": head_parity, "e2e_parity": e2e_parity,
+               "warm_speedup_vs_uncached_sparse":
+                   round(seconds["uncached_sparse"] / seconds["cached_warm"], 3),
+               "warm_speedup_vs_two_kernel":
+                   round(seconds["two_kernel"] / seconds["cached_warm"], 3),
+               "warm_speedup_vs_cold":
+                   round(seconds["cached_cold"] / seconds["cached_warm"], 3),
+               "index_seconds": round(index_seconds, 6),
+               **{k: round(v, 6) for k, v in stage.items()}}
+    records.append(summary)
+    print("BENCH " + json.dumps(summary))
+    return records, summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small batch/corpus, few iters")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero on parity drift or warm speedup "
+                         f"< {SPEEDUP_BOUND:g}x vs uncached packed-sparse")
+    ap.add_argument("--out", type=str, default=None,
+                    help="write BENCH records to this JSON file")
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--corpus", type=int, default=256)
+    ap.add_argument("--cache-size", type=int, default=4096)
+    ap.add_argument("--iters", type=int, default=8)
+    a = ap.parse_args()
+    if a.tiny:
+        records, summary = run(batch=48, n_corpus=32, n_query_batches=2,
+                               iters=2)
+    else:
+        records, summary = run(batch=a.batch, n_corpus=a.corpus,
+                               iters=a.iters, cache_size=a.cache_size)
+    if a.out:
+        with open(a.out, "w") as f:
+            json.dump(records, f, indent=1)
+    if a.check:
+        failures = []
+        if summary["head_parity"] > PARITY_BOUND:
+            failures.append(f"head-stage parity {summary['head_parity']:.2e}"
+                            f" > {PARITY_BOUND:.0e}")
+        if summary["e2e_parity"] > PARITY_BOUND:
+            failures.append(f"warm cached end-to-end parity "
+                            f"{summary['e2e_parity']:.2e} > "
+                            f"{PARITY_BOUND:.0e}")
+        # The 5x bound is an at-scale contract (batch 512): at --tiny sizes
+        # per-call dispatch overhead dominates every policy equally and the
+        # ratio is noise, so tiny checks gate parity only.
+        if (not a.tiny
+                and summary["warm_speedup_vs_uncached_sparse"] < SPEEDUP_BOUND):
+            failures.append(
+                "warm cached path only "
+                f"{summary['warm_speedup_vs_uncached_sparse']}x vs uncached "
+                f"packed-sparse (bound {SPEEDUP_BOUND:g}x)")
+        if failures:
+            print("CHECK FAILED: " + "; ".join(failures))
+            sys.exit(1)
+        print("CHECK OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,7 @@
 """ScoringEngine — the unified path-selection layer for SimGNN pair scoring
-(DESIGN.md §9).
+(DESIGN.md §9, §10).
 
-Five scoring paths coexist in this codebase, each fastest somewhere:
+Six scoring paths coexist in this codebase, each fastest somewhere:
 
   reference      pure-jnp `core.simgnn.pair_score`, bucketed; the parity
                  anchor and the no-kernels fallback.
@@ -16,6 +16,10 @@ Five scoring paths coexist in this codebase, each fastest somewhere:
   packed_sparse  packed tiles aggregated from the A' non-zero edge list
                  (DESIGN.md §9); wins on sparse (AIDS-like) streams —
                  the paper's own workload.
+  embedding_cache  per-graph GCN+Att embeddings served from an LRU keyed
+                 by a canonical graph hash, only the NTN+FCN head runs per
+                 query (DESIGN.md §10); wins on 1-vs-N search where the
+                 corpus side recurs across queries.
 
 Before this layer existed, the routing logic lived as ad-hoc branching
 inside `serve.batching.simgnn_query_server`. The engine makes the decision
@@ -34,15 +38,22 @@ across calls (the paper's 'customize per workload' principle, Table 2).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from collections import OrderedDict
+from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
 import jax
 import numpy as np
 
+from repro.core.cache import EmbeddingCache, graph_key
+
 PATHS = ("reference", "two_kernel", "bucketed_mega", "packed_dense",
-         "packed_sparse")
+         "packed_sparse", "embedding_cache")
 PACKED_PATHS = ("packed_dense", "packed_sparse")
+
+
+def _empty_idx() -> np.ndarray:
+    return np.empty(0, np.int64)
 
 
 @dataclass(frozen=True)
@@ -66,6 +77,14 @@ class ScorePlan:
     the packed node budget, or the whole batch on bucketed paths) run on
     `fallback` through power-of-two size buckets. `reason` is the
     human-readable dispatch rationale (surfaced by examples/simgnn_search).
+
+    On the embedding-cached path the plan additionally carries the hit/miss
+    split (DESIGN.md §10): `graph_keys` holds the canonical key of every
+    graph in the call (all lhs graphs, then all rhs graphs), `cached_idx`
+    the positions whose embedding is already resident, and `to_embed_idx`
+    the positions that will actually be embedded — the *first* occurrence
+    of each uncached key, so `len(to_embed_idx)` is the number of GCN+Att
+    runs a `score()` will pay (later duplicates ride along for free).
     """
     path: str
     fallback: str
@@ -73,6 +92,9 @@ class ScorePlan:
     over_idx: np.ndarray
     stats: WorkloadStats
     reason: str
+    cached_idx: np.ndarray = field(default_factory=_empty_idx)
+    to_embed_idx: np.ndarray = field(default_factory=_empty_idx)
+    graph_keys: tuple = ()
 
 
 class ScoringEngine:
@@ -92,10 +114,17 @@ class ScoringEngine:
     #: below this many pairs, FFD packing cannot fill even one tile enough
     #: to beat a single bucketed launch.
     MIN_PACK_PAIRS = 4
+    #: auto flips to the embedding-cached path when at least this fraction
+    #: of the call's unique graphs already have resident embeddings — below
+    #: it the misses' GCN+Att recompute (now unbatched with the rest of the
+    #: stream) erodes the head-only win (DESIGN.md §10 break-even).
+    CACHE_MIN_HIT_FRAC = 0.5
 
     def __init__(self, params, cfg, *, path: str = "auto",
                  node_budget: int | None = None,
-                 edge_budget: int | None = None):
+                 edge_budget: int | None = None,
+                 cache_size: int = 4096,
+                 embed_with_kernels: bool = False):
         if path != "auto" and path not in PATHS:
             raise ValueError(f"unknown path {path!r}; expected 'auto' or one "
                              f"of {PATHS}")
@@ -112,10 +141,20 @@ class ScoringEngine:
         # falls back to the §7 megakernel).
         self._bucket_flavor = (path if path in ("reference", "two_kernel")
                                else "bucketed_mega")
+        #: per-graph embedding LRU (DESIGN.md §10); capacity 0 disables it.
+        self.cache = EmbeddingCache(cache_size)
+        # Embedding executor flavor: the default pure-jnp jit keeps cached
+        # scores within the 1e-6 parity band of the dense reference (the
+        # embed stage is the amortized cold stage, so its speed is not the
+        # point); `embed_with_kernels=True` opts indexing throughput into
+        # the fused GCN+Att kernel (two-kernel stage 1, ~2e-5 parity).
+        self._embed_kernels = embed_with_kernels
         self.bucket_fns: dict[int, Callable] = {}
         self.last_pack_stats: dict | None = None
         self.last_plan: ScorePlan | None = None
         self._ref_fn: Callable | None = None
+        self._embed_ref_fn: Callable | None = None
+        self._head_fn: Callable | None = None
 
     # ------------------------------------------------------------- planning
 
@@ -149,7 +188,8 @@ class ScoringEngine:
             avg_degree=nnz / max(nodes, 1), density=nnz / max(cells, 1.0),
             has_labels=has_labels)
 
-    def _select(self, stats: WorkloadStats) -> tuple[str, str]:
+    def _select(self, stats: WorkloadStats,
+                cache_hit_frac: float = 0.0) -> tuple[str, str]:
         if self.path != "auto":
             return self.path, f"forced path={self.path}"
         if stats.n_pairs == 0:
@@ -161,6 +201,11 @@ class ScoringEngine:
             # from labels (a dense-feats executor is ROADMAP backlog).
             return ("bucketed_mega",
                     "graphs without int labels cannot take a packed path")
+        if cache_hit_frac >= self.CACHE_MIN_HIT_FRAC:
+            return ("embedding_cache",
+                    f"{cache_hit_frac:.0%} of unique graphs have resident "
+                    f"embeddings (>= {self.CACHE_MIN_HIT_FRAC:.0%}): only "
+                    "the NTN+FCN head runs")
         if stats.n_pairs < self.MIN_PACK_PAIRS:
             return ("bucketed_mega",
                     f"batch of {stats.n_pairs} too small to fill packed tiles"
@@ -174,6 +219,24 @@ class ScoringEngine:
                 f"measured avg degree {stats.avg_degree:.2f} > "
                 f"{self.SPARSE_MAX_DEGREE:g}: dense MXU matmul wins")
 
+    def _graph_keys(self, pairs: Sequence[tuple]) -> tuple:
+        """Canonical keys of every graph in the call: all lhs, then all rhs
+        (the flattened order `ScorePlan.cached_idx`/`to_embed_idx` index).
+
+        Hashes each distinct graph *object* once per call (1-vs-N batches
+        repeat the query dict and hot corpus dicts many times — the id()
+        memo turns 2·B WL hashes into one per unique object). The memo
+        lives only for this call: id() values are not stable across GC.
+        """
+        memo: dict[int, bytes] = {}
+
+        def key_of(g: dict) -> bytes:
+            k = memo.get(id(g))
+            if k is None:
+                k = memo[id(g)] = graph_key(g)
+            return k
+        return tuple(key_of(p[side]) for side in (0, 1) for p in pairs)
+
     def plan(self, pairs: Sequence[tuple]) -> ScorePlan:
         """Measure the workload and decide — without running anything."""
         # Density only steers the auto sparse/dense split and the sparse
@@ -181,18 +244,44 @@ class ScoringEngine:
         # adjacency scan.
         stats = self.workload_stats(
             pairs, measure_density=self.path in ("auto", "packed_sparse"))
-        path, reason = self._select(stats)
+        # The cache steers dispatch only when it could hold answers: keys
+        # are hashed (O(sum n_i), host-side) iff the path is forced to the
+        # cached one, or auto sees a non-empty cache — a cold cache costs
+        # auto streams nothing.
+        keys: tuple = ()
+        hit_frac = 0.0
+        if len(pairs) and stats.has_labels and self.cache.capacity > 0 and (
+                self.path == "embedding_cache"
+                or (self.path == "auto" and len(self.cache))):
+            keys = self._graph_keys(pairs)
+            unique = set(keys)
+            hit_frac = (sum(1 for k in unique if k in self.cache)
+                        / len(unique))
+        path, reason = self._select(stats, hit_frac)
+        cached_idx = to_embed_idx = np.empty(0, np.int64)
+        if path == "embedding_cache" and keys:
+            hit = [k in self.cache for k in keys]
+            cached_idx = np.flatnonzero(hit)
+            first = {k: i for i, k in reversed(list(enumerate(keys)))}
+            to_embed_idx = np.asarray(
+                sorted(i for k, i in first.items() if not hit[i]), np.int64)
         if path in PACKED_PATHS:
             fits = np.asarray([max(g1["adj"].shape[0], g2["adj"].shape[0])
                                <= self.node_budget for g1, g2 in pairs], bool)
             fit_idx = np.flatnonzero(fits)
             over_idx = np.flatnonzero(~fits)
+        elif path == "embedding_cache":
+            # The embed stage buckets internally with power-of-two overflow,
+            # so nothing is oversized for this path.
+            fit_idx = np.arange(len(pairs))
+            over_idx = np.empty(0, np.int64)
         else:
             fit_idx = np.empty(0, np.int64)
             over_idx = np.arange(len(pairs))
         return ScorePlan(path=path, fallback=self._bucket_flavor,
                          fit_idx=fit_idx, over_idx=over_idx, stats=stats,
-                         reason=reason)
+                         reason=reason, cached_idx=cached_idx,
+                         to_embed_idx=to_embed_idx, graph_keys=keys)
 
     # ------------------------------------------------------------ execution
 
@@ -253,6 +342,113 @@ class ScoringEngine:
         self.last_pack_stats = pstats
         out[idx] = unpack_pair_scores(s, packed, len(pairs))
 
+    # ------------------------------------------------- embedding-cached path
+
+    def _embed_fn(self) -> Callable:
+        """(params, adj, feats, mask) -> [B, F] graph embeddings, jit-cached.
+
+        Pure-jnp `graph_embedding` by default (the parity anchor — per-graph
+        results are bit-identical across batch compositions and pad widths,
+        which the cache correctness tests rely on); the fused GCN+Att kernel
+        when the engine was built with `embed_with_kernels=True`.
+        """
+        if self._embed_ref_fn is None:
+            if self._embed_kernels:
+                from repro.core.gcn import normalized_adjacency
+                from repro.kernels import ops
+
+                def fused(params, adj, feats, mask):
+                    a_norm = normalized_adjacency(adj, mask)
+                    return ops.graph_embeddings_fused(params, a_norm, feats,
+                                                      mask)
+                self._embed_ref_fn = fused
+            else:
+                from repro.core.simgnn import graph_embedding
+                self._embed_ref_fn = jax.jit(graph_embedding)
+        return self._embed_ref_fn
+
+    def embed_graphs(self, graphs: Sequence[dict], *,
+                     keys: Sequence[bytes] | None = None) -> np.ndarray:
+        """Per-graph `[F]` GCN+Att embeddings through the cache.
+
+        Hits are served from the LRU; unique misses are bucketed by size
+        (power-of-two overflow for oversized graphs), embedded in batched
+        calls, and inserted. Returns `[len(graphs), F]` float32 in input
+        order — duplicates within one call are embedded once.
+        """
+        from repro.core.batching import bucket_for, pad_graphs
+
+        f = self.cfg.gcn_dims[-1]
+        out = np.zeros((len(graphs), f), np.float32)
+        if not graphs:
+            return out
+        if keys is None:
+            keys = [graph_key(g) for g in graphs]
+        # One LRU access per *unique* key: duplicates within a call are one
+        # logical lookup (hit/miss counters stay per-graph, not per-slot).
+        seen: dict[bytes, np.ndarray | None] = {}
+        misses: "OrderedDict[bytes, list[int]]" = OrderedDict()
+        for i, k in enumerate(keys):
+            emb = seen[k] if k in seen else seen.setdefault(
+                k, self.cache.get(k))
+            if emb is not None:
+                out[i] = emb
+            else:
+                misses.setdefault(k, []).append(i)
+        if not misses:
+            return out
+        buckets: dict[int, list[tuple[bytes, dict]]] = {}
+        for k, idxs in misses.items():
+            g = graphs[idxs[0]]
+            b = bucket_for(g["adj"].shape[0], allow_oversize=True)
+            buckets.setdefault(b, []).append((k, g))
+        embed = self._embed_fn()
+        for b, items in sorted(buckets.items()):
+            batch = pad_graphs([g for _, g in items],
+                               self.cfg.n_node_labels, b)
+            hg = np.asarray(embed(self.params, batch.adj, batch.feats,
+                                  batch.mask), np.float32)
+            for (k, _), emb in zip(items, hg):
+                emb = emb.copy()
+                emb.setflags(write=False)
+                self.cache.put(k, emb)
+                out[misses[k]] = emb
+        return out
+
+    def pair_scores_from_embeddings(self, hg1, hg2) -> np.ndarray:
+        """Batched NTN+FCN head on precomputed `[B, F]` graph embeddings —
+        the entire per-query cost of a warm 1-vs-N search (DESIGN.md §10).
+        Runs the fused head kernel (`kernels/simgnn_head.py`) except on
+        forced-reference engines, which stay kernel-free."""
+        import jax.numpy as jnp
+
+        if self._head_fn is None:
+            if self._bucket_flavor == "reference":
+                from repro.core.simgnn import fcn_head, ntn_scores
+
+                self._head_fn = jax.jit(lambda params, h1, h2: fcn_head(
+                    params["fcn"], ntn_scores(params["ntn"], h1, h2)))
+            else:
+                from repro.kernels import ops
+
+                def head(params, h1, h2):
+                    bp = max(8, min(128, -(-h1.shape[0] // 8) * 8))
+                    return ops.pair_scores_fused(params, h1, h2,
+                                                 block_pairs=bp)
+                self._head_fn = head
+        hg1 = jnp.asarray(np.asarray(hg1, np.float32))
+        hg2 = jnp.asarray(np.asarray(hg2, np.float32))
+        return np.asarray(self._head_fn(self.params, hg1, hg2), np.float32)
+
+    def _score_cached(self, pairs, out: np.ndarray, plan: ScorePlan):
+        n = len(pairs)
+        keys = plan.graph_keys if len(plan.graph_keys) == 2 * n else None
+        hg1 = self.embed_graphs([p[0] for p in pairs],
+                                keys=keys[:n] if keys else None)
+        hg2 = self.embed_graphs([p[1] for p in pairs],
+                                keys=keys[n:] if keys else None)
+        out[:] = self.pair_scores_from_embeddings(hg1, hg2)
+
     def score(self, pairs: Sequence[tuple]) -> np.ndarray:
         """Score a batch of graph-pair dicts in original order."""
         out = np.zeros(len(pairs), np.float32)
@@ -268,6 +464,10 @@ class ScoringEngine:
             raise ValueError(
                 "graphs must carry int node labels ('labels'); a dense-"
                 "feats executor is not implemented yet (ROADMAP open item)")
+        if plan.path == "embedding_cache":
+            if len(pairs):
+                self._score_cached(pairs, out, plan)
+            return out
         if len(plan.fit_idx):
             self._score_packed([pairs[i] for i in plan.fit_idx],
                                plan.fit_idx, out,

@@ -108,7 +108,7 @@ class MicroBatcher:
 
 def simgnn_query_server(params, cfg, *, use_kernels: bool = False,
                         packing: bool = True, node_budget: int | None = None,
-                        path: str | None = None):
+                        path: str | None = None, cache_size: int = 4096):
     """Returns score_fn(list[(g1, g2)]) -> np.ndarray of similarity scores.
 
     A thin wrapper over `core.engine.ScoringEngine` (DESIGN.md §9) — no path
@@ -117,7 +117,13 @@ def simgnn_query_server(params, cfg, *, use_kernels: bool = False,
     "bucketed_mega"; `use_kernels=True, packing=True` -> "auto" (the engine
     measures each call's density and picks packed-sparse or packed-dense,
     with the bucketed fallback for oversized pairs). An explicit `path`
-    overrides the flags.
+    overrides the flags. `cache_size` bounds the engine's per-graph
+    embedding LRU (DESIGN.md §10; 0 disables it). The LRU is populated by
+    the embedding path itself — force `path="embedding_cache"`, or warm it
+    out of band via `score_fn.engine.embed_graphs` (what
+    `serve.search.SimilaritySearchServer.index` does) — after which auto
+    dispatch serves recurring graphs embedding-free; plain `score()` calls
+    on the non-cached paths never write it.
 
     Public contract kept from the pre-engine server: the returned score_fn
     exposes `bucket_fns` (the engine's per-bucket callable cache),
@@ -129,7 +135,8 @@ def simgnn_query_server(params, cfg, *, use_kernels: bool = False,
     if path is None:
         path = (("auto" if packing else "bucketed_mega") if use_kernels
                 else "reference")
-    engine = ScoringEngine(params, cfg, path=path, node_budget=node_budget)
+    engine = ScoringEngine(params, cfg, path=path, node_budget=node_budget,
+                           cache_size=cache_size)
 
     def score(pairs):
         out = engine.score(pairs)

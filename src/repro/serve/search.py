@@ -1,0 +1,122 @@
+"""1-vs-N graph similarity search service (DESIGN.md §10).
+
+The paper's end use is similarity *search*: one query compound scored
+against a corpus of molecules, top results returned. The corpus side of
+every pair is query-independent, so this server indexes the corpus ONCE
+(GCN+Att embeddings through the engine's cache) and serves each query with
+one query-side embedding plus a batched NTN+FCN head over the whole corpus
+— the head kernel (`kernels/simgnn_head.py`) is the entire per-query device
+cost. `benchmarks/search.py` measures the resulting warm-corpus speedup vs
+rescoring every pair through the packed-sparse path.
+
+The server is a thin orchestration layer: all scoring goes through
+`core.engine.ScoringEngine` (`embed_graphs` / `pair_scores_from_embeddings`),
+so path policy, caching, and parity anchoring stay in one place.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.engine import ScoringEngine
+
+
+@dataclass
+class SearchStats:
+    """Measured server behavior: stage seconds are cumulative wall-clock so
+    callers can report per-stage shares; cache counters come straight from
+    the engine's LRU."""
+    queries: int = 0
+    pairs_scored: int = 0
+    index_size: int = 0
+    embed_seconds: float = 0.0     # query-side embedding (+ any corpus misses)
+    head_seconds: float = 0.0      # NTN+FCN over the corpus
+    topk_seconds: float = 0.0      # host-side partial sort
+    cache: dict = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {"queries": self.queries, "pairs_scored": self.pairs_scored,
+                "index_size": self.index_size,
+                "embed_seconds": round(self.embed_seconds, 6),
+                "head_seconds": round(self.head_seconds, 6),
+                "topk_seconds": round(self.topk_seconds, 6),
+                **{f"cache_{k}": v for k, v in self.cache.items()}}
+
+
+class SimilaritySearchServer:
+    """Index a graph corpus once, then serve top-k similarity queries.
+
+    `index()` embeds every corpus graph through the engine's embedding
+    cache and keeps the resulting `[N, F]` matrix resident — evictions from
+    the LRU (which also serves ad-hoc `score()` traffic) never invalidate
+    the index. `topk()` embeds the query (a cache hit if the client repeats
+    it), broadcasts it against the corpus matrix through the fused head,
+    and partial-sorts the scores host-side.
+    """
+
+    def __init__(self, params, cfg, *, cache_size: int = 4096,
+                 embed_with_kernels: bool = False):
+        self.engine = ScoringEngine(params, cfg, path="embedding_cache",
+                                    cache_size=cache_size,
+                                    embed_with_kernels=embed_with_kernels)
+        self.corpus: list[dict] = []
+        self.corpus_emb: np.ndarray | None = None
+        self.stats = SearchStats()
+
+    # -------------------------------------------------------------- indexing
+
+    def index(self, corpus: list[dict]) -> np.ndarray:
+        """Embed and retain the corpus; returns the `[N, F]` matrix.
+
+        Re-indexing replaces the corpus. Embeddings also land in the
+        engine's LRU, so mixed flows (`engine.score` on pairs touching
+        corpus graphs) hit without recomputing.
+        """
+        t0 = time.perf_counter()
+        self.corpus = list(corpus)
+        self.corpus_emb = self.engine.embed_graphs(self.corpus)
+        self.stats.embed_seconds += time.perf_counter() - t0
+        self.stats.index_size = len(self.corpus)
+        self.stats.cache = self.engine.cache.stats()
+        return self.corpus_emb
+
+    # -------------------------------------------------------------- querying
+
+    def topk(self, query: dict, k: int = 10) -> tuple[np.ndarray, np.ndarray]:
+        """Score `query` against the whole corpus; returns (indices, scores)
+        of the k most similar corpus graphs, scores descending."""
+        scores = self.scores(query)
+        t0 = time.perf_counter()
+        k = min(k, len(scores))
+        top = np.argpartition(-scores, k - 1)[:k]
+        top = top[np.argsort(-scores[top], kind="stable")]
+        self.stats.topk_seconds += time.perf_counter() - t0
+        return top, scores[top]
+
+    def scores(self, query: dict) -> np.ndarray:
+        """Full `[N]` similarity vector of `query` vs the indexed corpus."""
+        if self.corpus_emb is None:
+            raise ValueError("no corpus indexed; call index(corpus) first")
+        t0 = time.perf_counter()
+        hq = self.engine.embed_graphs([query])
+        t1 = time.perf_counter()
+        hq = np.broadcast_to(hq[0], self.corpus_emb.shape)
+        out = self.engine.pair_scores_from_embeddings(hq, self.corpus_emb)
+        t2 = time.perf_counter()
+        self.stats.queries += 1
+        self.stats.pairs_scored += len(self.corpus)
+        self.stats.embed_seconds += t1 - t0
+        self.stats.head_seconds += t2 - t1
+        self.stats.cache = self.engine.cache.stats()
+        return out
+
+    def search(self, queries: list[dict], k: int = 10) -> list[tuple]:
+        """Batched convenience wrapper: [(indices, scores), ...] per query."""
+        return [self.topk(q, k) for q in queries]
+
+    @property
+    def hit_rate(self) -> float:
+        return self.engine.cache.hit_rate

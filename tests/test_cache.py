@@ -1,0 +1,211 @@
+"""Embedding cache + 1-vs-N search correctness (core/cache.py,
+engine embedding path, serve/search.py — DESIGN.md §10): canonical-hash
+invariance, LRU mechanics, capacity-zero bypass, bit-identical mixed
+hit/miss scoring, the plan's cached/to_embed split, auto dispatch flipping
+on a warm cache, and the search server's top-k contract.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.cache import EmbeddingCache, graph_key
+from repro.core.engine import ScoringEngine
+from repro.core.simgnn import SimGNNConfig, init_simgnn_params
+from repro.data.graphs import edit_graph, random_graph, zipf_corpus
+from repro.serve.search import SimilaritySearchServer
+
+CFG = SimGNNConfig()
+PARAMS = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+
+
+def _graphs(seed, n, max_n=40):
+    rng = np.random.default_rng(seed)
+    return [random_graph(rng, int(rng.integers(5, max_n))) for _ in range(n)]
+
+
+def _strip(g):
+    """A fresh dict without the memoized key (forces a real re-hash)."""
+    return {"adj": g["adj"].copy(), "labels": g["labels"].copy()}
+
+
+# ------------------------------------------------------------- canonical key
+
+def test_graph_key_node_permutation_hits():
+    rng = np.random.default_rng(0)
+    for g in _graphs(1, 10):
+        perm = rng.permutation(g["adj"].shape[0])
+        permuted = {"adj": g["adj"][perm][:, perm],
+                    "labels": g["labels"][perm]}
+        assert graph_key(g) == graph_key(permuted)
+
+
+def test_graph_key_distinguishes_real_differences():
+    gs = _graphs(2, 30)
+    assert len({graph_key(g) for g in gs}) == len(gs)
+    g = _strip(gs[0])
+    relabeled = _strip(g)
+    relabeled["labels"][0] = (relabeled["labels"][0] + 1) % CFG.n_node_labels
+    assert graph_key(g) != graph_key(relabeled)
+    deedged = _strip(g)
+    r, c = np.nonzero(np.triu(deedged["adj"], 1))
+    deedged["adj"][r[0], c[0]] = deedged["adj"][c[0], r[0]] = 0.0
+    assert graph_key(g) != graph_key(deedged)
+
+
+def test_graph_key_memoized_on_dict():
+    g = _strip(_graphs(3, 1)[0])
+    assert "_graph_key" not in g
+    k = graph_key(g)
+    assert g["_graph_key"] == k
+    assert graph_key(g) == k
+    # edit_graph builds fresh dicts: edits never inherit a stale memo
+    edited = edit_graph(np.random.default_rng(0), g, 2)
+    assert "_graph_key" not in edited
+
+
+# ---------------------------------------------------------------- LRU policy
+
+def test_lru_eviction_order():
+    cache = EmbeddingCache(capacity=2)
+    e = {k: np.full(2, i, np.float32) for i, k in enumerate("abc")}
+    cache.put(b"a", e["a"])
+    cache.put(b"b", e["b"])
+    assert cache.get(b"a") is e["a"]         # promotes a over b
+    cache.put(b"c", e["c"])                  # evicts b, the LRU entry
+    assert b"b" not in cache and b"a" in cache and b"c" in cache
+    assert cache.evictions == 1
+    assert cache.get(b"b") is None           # miss counted
+    assert cache.stats()["size"] == 2
+
+
+def test_peek_is_recency_and_stats_neutral():
+    cache = EmbeddingCache(capacity=2)
+    cache.put(b"a", np.zeros(1))
+    cache.put(b"b", np.zeros(1))
+    cache.peek(b"a")                         # must NOT promote a
+    cache.put(b"c", np.zeros(1))             # evicts a (still LRU)
+    assert b"a" not in cache
+    assert cache.hits == 0 and cache.misses == 0
+
+
+def test_capacity_zero_bypasses_storage():
+    cache = EmbeddingCache(capacity=0)
+    cache.put(b"a", np.zeros(1))
+    assert len(cache) == 0 and cache.get(b"a") is None
+    assert cache.misses == 1 and cache.evictions == 0
+    with pytest.raises(ValueError, match=">= 0"):
+        EmbeddingCache(capacity=-1)
+
+
+def test_engine_capacity_zero_still_scores():
+    pairs = [(g, edit_graph(np.random.default_rng(7), g, 2))
+             for g in _graphs(7, 5)]
+    ref = ScoringEngine(PARAMS, CFG, path="reference").score(pairs)
+    eng = ScoringEngine(PARAMS, CFG, path="embedding_cache", cache_size=0)
+    out = eng.score(pairs)
+    np.testing.assert_allclose(out, ref, rtol=0, atol=1e-6)
+    assert len(eng.cache) == 0               # nothing was retained
+
+
+# ----------------------------------------------------- engine cache behavior
+
+def test_mixed_hit_miss_bit_identical_to_cold_run():
+    shared = _graphs(10, 4)
+    fresh = _graphs(11, 4)
+    pairs = list(zip(shared, fresh)) + list(zip(fresh, shared))
+
+    warm = ScoringEngine(PARAMS, CFG, path="embedding_cache")
+    warm.embed_graphs(shared)                # half the batch becomes hits
+    assert len(warm.cache) == len(shared)
+    s_mixed = warm.score(pairs)
+
+    cold = ScoringEngine(PARAMS, CFG, path="embedding_cache")
+    s_cold = cold.score(pairs)
+    np.testing.assert_array_equal(s_mixed, s_cold)   # bit-identical
+
+
+def test_plan_reports_cached_to_embed_split():
+    corpus = _graphs(12, 6)
+    queries = _graphs(13, 6)
+    eng = ScoringEngine(PARAMS, CFG, path="embedding_cache")
+    eng.embed_graphs(corpus)
+    plan = eng.plan(list(zip(queries, corpus)))
+    assert plan.path == "embedding_cache"
+    assert len(plan.graph_keys) == 12
+    # rhs graphs (positions 6..11) are resident, lhs are unique misses
+    assert sorted(plan.cached_idx) == list(range(6, 12))
+    assert sorted(plan.to_embed_idx) == list(range(6))
+    # duplicates of one miss embed once: pair the same query everywhere
+    dup = [(queries[0], c) for c in corpus]
+    plan = eng.plan(dup)
+    assert len(plan.to_embed_idx) == 0 or len(plan.to_embed_idx) == 1
+
+
+def test_embed_graphs_dedups_within_call_and_uses_cache():
+    g = _graphs(14, 1)[0]
+    eng = ScoringEngine(PARAMS, CFG, path="embedding_cache")
+    out = eng.embed_graphs([g, g, g])
+    assert eng.cache.misses == 1             # one unique graph, one embed
+    np.testing.assert_array_equal(out[0], out[1])
+    eng.embed_graphs([g])
+    assert eng.cache.hits >= 1
+
+
+def test_auto_dispatch_flips_on_warm_cache():
+    rng = np.random.default_rng(15)
+    corpus = _graphs(15, 8)
+    pairs = [(random_graph(rng, 20), c) for c in corpus]
+    eng = ScoringEngine(PARAMS, CFG)         # auto
+    assert eng.plan(pairs).path == "packed_sparse"   # cold cache: unchanged
+    eng.embed_graphs(corpus)                 # warm the corpus side
+    plan = eng.plan(pairs)
+    assert plan.path == "embedding_cache"
+    assert "resident embeddings" in plan.reason
+    ref = ScoringEngine(PARAMS, CFG, path="reference").score(pairs)
+    np.testing.assert_allclose(eng.score(pairs), ref, rtol=0, atol=1e-6)
+
+
+def test_cache_disabled_auto_never_flips():
+    corpus = _graphs(16, 8)
+    eng = ScoringEngine(PARAMS, CFG, cache_size=0)
+    eng.embed_graphs(corpus)
+    pairs = [(corpus[0], c) for c in corpus]
+    assert eng.plan(pairs).path != "embedding_cache"
+
+
+# ------------------------------------------------------------- search server
+
+def test_search_server_topk_contract():
+    corpus = zipf_corpus(21, 24)
+    srv = SimilaritySearchServer(PARAMS, CFG)
+    srv.index(corpus)
+    query = random_graph(np.random.default_rng(22), 20)
+    idx, scores = srv.topk(query, k=5)
+    assert len(idx) == 5 and np.all(np.diff(scores) <= 0)
+    full = srv.scores(query)
+    np.testing.assert_array_equal(scores, full[idx])
+    assert full.argmax() == idx[0]
+    ref = ScoringEngine(PARAMS, CFG, path="reference").score(
+        [(query, g) for g in corpus])
+    np.testing.assert_allclose(full, ref, rtol=0, atol=1e-6)
+    assert srv.stats.queries == 2 and srv.stats.index_size == 24
+    # corpus scoring reads the resident index matrix, not the LRU; only
+    # the repeated query-side embed goes through the cache — and hits.
+    assert srv.stats.as_dict()["cache_hits"] >= 1
+
+
+def test_search_server_requires_index():
+    srv = SimilaritySearchServer(PARAMS, CFG)
+    with pytest.raises(ValueError, match="no corpus indexed"):
+        srv.topk(_graphs(23, 1)[0])
+
+
+def test_search_server_index_survives_lru_eviction():
+    corpus = zipf_corpus(24, 8)
+    srv = SimilaritySearchServer(PARAMS, CFG, cache_size=2)
+    emb = srv.index(corpus)
+    assert len(srv.engine.cache) == 2        # LRU kept only its capacity
+    assert emb.shape == (8, CFG.gcn_dims[-1])
+    idx, _ = srv.topk(random_graph(np.random.default_rng(25), 16), k=3)
+    assert len(idx) == 3                     # evictions never break serving

@@ -206,7 +206,8 @@ def test_server_no_direct_path_branching():
 
 def test_engine_paths_registry():
     assert set(PATHS) == {"reference", "two_kernel", "bucketed_mega",
-                          "packed_dense", "packed_sparse"}
+                          "packed_dense", "packed_sparse",
+                          "embedding_cache"}
 
 
 def test_search_pairs_degree_knob_changes_dispatch():

@@ -1,0 +1,139 @@
+"""Property-based invariants for the pair-packing planner (hypothesis):
+over random graph sizes, degrees and budgets —
+
+  * every pair lands in exactly one live tile slot (`pair_index` is a
+    permutation of the input order under `pair_mask`);
+  * segment IDs are contiguous per pair and sized exactly to each graph;
+  * unpacking a packed `[T, P]` score tile recovers the input order;
+  * `with_edges=True` CSR+COO round-trips the normalized adjacency's
+    non-zeros exactly (count AND values).
+
+Each property is a plain `_check_*` helper driven by a seeded generator so
+the invariants are runnable without hypothesis too; the hypothesis wrappers
+explore the (seed, n_pairs, budget) space in CI.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.batching import pack_pairs, unpack_pair_scores
+from repro.core.gcn import normalized_adjacency
+from repro.data.graphs import random_graph
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+def _random_pairs(seed: int, n_pairs: int, node_budget: int,
+                  max_degree: float):
+    rng = np.random.default_rng(seed)
+    deg = None if max_degree <= 0 else float(rng.uniform(1.0, max_degree))
+    return [(random_graph(rng, int(rng.integers(2, node_budget + 1)),
+                          avg_degree=deg),
+             random_graph(rng, int(rng.integers(2, node_budget + 1)),
+                          avg_degree=deg))
+            for _ in range(n_pairs)]
+
+
+def _check_slots_and_segments(seed, n_pairs, node_budget, max_degree):
+    pairs = _random_pairs(seed, n_pairs, node_budget, max_degree)
+    packed, stats = pack_pairs(pairs, node_budget)
+    live = np.asarray(packed.pair_mask) > 0
+    idxs = np.asarray(packed.pair_index)[live]
+    # exactly one live slot per input pair, none invented
+    assert sorted(idxs.tolist()) == list(range(n_pairs))
+    assert stats["n_pairs"] == n_pairs
+    for side, (seg_a, mask_a) in enumerate(
+            ((packed.seg1, packed.mask1), (packed.seg2, packed.mask2))):
+        seg = np.asarray(seg_a)
+        mask = np.asarray(mask_a) > 0
+        for t in range(seg.shape[0]):
+            for p in np.flatnonzero(live[t]):
+                nodes = np.flatnonzero((seg[t] == p) & mask[t])
+                pair = pairs[int(np.asarray(packed.pair_index)[t, p])]
+                # sized exactly to the packed graph, contiguous run
+                assert len(nodes) == pair[side]["adj"].shape[0]
+                assert np.array_equal(nodes,
+                                      np.arange(nodes[0], nodes[-1] + 1))
+            # no live node belongs to a dead slot
+            assert set(np.unique(seg[t][mask[t]])) <= set(
+                np.flatnonzero(live[t]))
+
+
+def _check_unpack_roundtrip(seed, n_pairs, node_budget, max_degree):
+    pairs = _random_pairs(seed, n_pairs, node_budget, max_degree)
+    packed, _ = pack_pairs(pairs, node_budget)
+    rng = np.random.default_rng(seed + 1)
+    scores_tp = rng.normal(size=np.asarray(packed.pair_mask).shape).astype(
+        np.float32)
+    out = unpack_pair_scores(scores_tp, packed, n_pairs)
+    live = np.asarray(packed.pair_mask) > 0
+    pair_index = np.asarray(packed.pair_index)
+    for t, p in zip(*np.nonzero(live)):
+        assert out[pair_index[t, p]] == scores_tp[t, p]
+
+
+def _check_edges_roundtrip(seed, n_pairs, node_budget, max_degree,
+                           nbr_budget):
+    pairs = _random_pairs(seed, n_pairs, node_budget, max_degree)
+    edge_budget = None if nbr_budget is None else node_budget * nbr_budget
+    packed, stats = pack_pairs(pairs, node_budget, with_edges=True,
+                               edge_budget=edge_budget)
+    nb = packed.node_budget
+    for side, (adj, mask, csr, ov) in enumerate((
+            (packed.adj1, packed.mask1, packed.edges.edges1,
+             packed.edges.overflow1),
+            (packed.adj2, packed.mask2, packed.edges.edges2,
+             packed.edges.overflow2))):
+        a_norm = np.asarray(normalized_adjacency(np.asarray(adj),
+                                                 np.asarray(mask)))
+        nnz = int(np.count_nonzero(a_norm))
+        n_csr = int(np.asarray(csr.edge_mask).sum())
+        n_ov = int(np.asarray(ov.edge_mask).sum())
+        # nnz round-trips exactly: every A' non-zero is in CSR or COO,
+        # no pad slot carries weight
+        assert n_csr + n_ov == nnz
+        key = "nnz_lhs" if side == 0 else "nnz_rhs"
+        assert stats[key] == nnz
+        # value-exact dense reconstruction (weights copied, never recomputed)
+        dense = np.zeros_like(a_norm)
+        for eb in (csr, ov):
+            snd = np.asarray(eb.senders)
+            rcv = np.asarray(eb.receivers)
+            w = np.asarray(eb.weights) * np.asarray(eb.edge_mask)
+            for t in range(dense.shape[0]):
+                np.add.at(dense[t], (rcv[t], snd[t]), w[t])
+        assert np.array_equal(dense, a_norm)
+        # CSR plane layout: slot s holds an in-edge of node s % NB
+        rcv = np.asarray(csr.receivers)
+        assert np.array_equal(rcv % nb,
+                              np.broadcast_to(np.arange(nb * (rcv.shape[-1]
+                                                              // nb)) % nb,
+                                              rcv.shape))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12),
+       st.sampled_from((16, 32, 64)), st.sampled_from((0.0, 3.0, 6.0)))
+def test_every_pair_in_exactly_one_slot_with_contiguous_segments(
+        seed, n_pairs, node_budget, max_degree):
+    _check_slots_and_segments(seed, n_pairs, node_budget, max_degree)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12),
+       st.sampled_from((16, 32, 64)), st.sampled_from((0.0, 4.0)))
+def test_unpack_recovers_packed_scores(seed, n_pairs, node_budget,
+                                       max_degree):
+    _check_unpack_roundtrip(seed, n_pairs, node_budget, max_degree)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8),
+       st.sampled_from((16, 32, 64)), st.sampled_from((0.0, 3.0, 8.0)),
+       st.sampled_from((None, 4, 8)))
+def test_packed_edges_roundtrip_adjacency_nnz(seed, n_pairs, node_budget,
+                                              max_degree, nbr_budget):
+    _check_edges_roundtrip(seed, n_pairs, node_budget, max_degree,
+                           nbr_budget)

@@ -1,0 +1,85 @@
+"""Engine-wide parity matrix: every scoring path × dtype × odd/even batch,
+asserted against ONE dense-reference score vector from a single source of
+truth (this file's `REF` + `ATOL` tables) — replacing the per-file ad-hoc
+comparisons as the parity contract.
+
+f32 bounds: the pure-jnp reference and the packed/embedding-cached kernels
+hold 1e-6 (post-sigmoid scores); the two bucketed fused-GCN paths
+(two_kernel, bucketed_mega) re-derive normalization inside the kernel in a
+different contraction order and hold 2e-5 — the bound their own seed tests
+established. bf16 inputs hold the 2e-2 band everywhere (fp32 accumulation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.batching import bucket_pairs
+from repro.core.engine import PATHS, ScoringEngine
+from repro.core.simgnn import SimGNNConfig, init_simgnn_params, pair_score
+from repro.data.graphs import random_graph
+
+CFG = SimGNNConfig()
+
+#: single source of truth for the f32 parity bound of every path.
+ATOL_F32 = {
+    "reference": 1e-6,
+    "two_kernel": 2e-5,
+    "bucketed_mega": 2e-5,
+    "packed_dense": 1e-6,
+    "packed_sparse": 1e-6,
+    "embedding_cache": 1e-6,
+}
+ATOL_BF16 = 2e-2
+BATCHES = (7, 12)        # odd (pads every block policy) and even
+
+
+@functools.lru_cache(maxsize=None)
+def _params(dtype: str):
+    p = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+    if dtype == "bfloat16":
+        p = jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16)
+            if x.dtype == jnp.float32 else x, p)
+    return p
+
+
+@functools.lru_cache(maxsize=None)
+def _pairs(batch: int):
+    rng = np.random.default_rng(100 + batch)
+    return tuple((random_graph(rng, int(rng.integers(5, 65))),
+                  random_graph(rng, int(rng.integers(5, 65))))
+                 for _ in range(batch))
+
+
+@functools.lru_cache(maxsize=None)
+def _reference(batch: int) -> tuple:
+    """The dense f32 reference: bucketed pure-jnp `pair_score`."""
+    out = np.zeros(batch, np.float32)
+    for b, (lhs, rhs, idxs) in bucket_pairs(
+            _pairs(batch), CFG.n_node_labels, allow_oversize=True).items():
+        out[idxs] = np.asarray(pair_score(
+            _params("float32"), lhs.adj, lhs.feats, lhs.mask,
+            rhs.adj, rhs.feats, rhs.mask))
+    return tuple(out)
+
+
+@pytest.mark.parametrize("batch", BATCHES)
+@pytest.mark.parametrize("dtype", ("float32", "bfloat16"))
+@pytest.mark.parametrize("path", PATHS)
+def test_parity_matrix(path, dtype, batch):
+    assert path in ATOL_F32, f"new path {path} missing a parity bound"
+    engine = ScoringEngine(_params(dtype), CFG, path=path)
+    out = engine.score(list(_pairs(batch)))
+    ref = np.asarray(_reference(batch), np.float32)
+    atol = ATOL_F32[path] if dtype == "float32" else ATOL_BF16
+    np.testing.assert_allclose(out, ref, rtol=0, atol=atol)
+    assert engine.last_plan.path == path
+
+
+def test_matrix_covers_every_engine_path():
+    """The matrix and the engine registry cannot drift apart silently."""
+    assert set(ATOL_F32) == set(PATHS)

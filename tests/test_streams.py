@@ -1,0 +1,73 @@
+"""Seed-determinism regression for the data/graphs.py streams (no
+hypothesis required — these must run everywhere tier-1 runs).
+
+The host data pipeline is the FPGA host-preprocessing role: the same seed
+must realize the same graphs, the same measured density/degree annotations
+and — for the Zipf search stream — the same corpus and pick sequence, or
+benchmark/bench-gate numbers stop being comparable across runs.
+"""
+
+import numpy as np
+
+from repro.data.graphs import (pair_stream, search_pairs, zipf_corpus,
+                               zipf_query_stream)
+
+
+def _same_graph(a: dict, b: dict) -> bool:
+    return (np.array_equal(a["adj"], b["adj"])
+            and np.array_equal(a["labels"], b["labels"])
+            and a["density"] == b["density"]
+            and a["avg_degree"] == b["avg_degree"])
+
+
+def test_pair_stream_seed_deterministic():
+    a = next(pair_stream(9, 6, avg_degree=3.0))
+    b = next(pair_stream(9, 6, avg_degree=3.0))
+    np.testing.assert_array_equal(np.asarray(a["adj1"]),
+                                  np.asarray(b["adj1"]))
+    np.testing.assert_array_equal(a["target"], b["target"])
+    assert a["density"] == b["density"]
+    assert a["avg_degree"] == b["avg_degree"]
+    c = next(pair_stream(10, 6, avg_degree=3.0))
+    assert not np.array_equal(np.asarray(a["adj1"]), np.asarray(c["adj1"]))
+
+
+def test_search_pairs_seed_deterministic():
+    a = search_pairs(4, 5, avg_degree=2.1)
+    b = search_pairs(4, 5, avg_degree=2.1)
+    assert all(_same_graph(x, y) for (x, _), (y, _) in zip(a, b))
+    assert all(_same_graph(x, y) for (_, x), (_, y) in zip(a, b))
+
+
+def test_zipf_stream_seed_deterministic():
+    sa, sb = (zipf_query_stream(17, 24, n_corpus=32) for _ in range(2))
+    for _ in range(3):
+        a, b = next(sa), next(sb)
+        np.testing.assert_array_equal(a["corpus_idx"], b["corpus_idx"])
+        assert _same_graph(a["query"], b["query"])
+        assert all(_same_graph(x, y) for (_, x), (_, y)
+                   in zip(a["pairs"], b["pairs"]))
+        assert a["unique_frac"] == b["unique_frac"]
+    other = next(zipf_query_stream(18, 24, n_corpus=32))
+    assert not np.array_equal(next(sa)["corpus_idx"], other["corpus_idx"])
+
+
+def test_zipf_stream_matches_zipf_corpus():
+    """`zipf_corpus(seed)` IS the stream's corpus: an indexing service can
+    embed exactly the graphs the stream will request."""
+    corpus = zipf_corpus(19, 16)
+    batch = next(zipf_query_stream(19, 20, n_corpus=16))
+    for (_, g), i in zip(batch["pairs"], batch["corpus_idx"]):
+        assert _same_graph(g, corpus[i])
+        assert g["adj"].shape == corpus[i]["adj"].shape
+
+
+def test_zipf_stream_is_skewed_and_reuses_corpus():
+    batch = next(zipf_query_stream(20, 128, n_corpus=64, exponent=1.2))
+    idx = batch["corpus_idx"]
+    # heavy reuse: far fewer unique graphs than picks, and the most popular
+    # graph drawn well above the uniform expectation (2 picks/graph)
+    assert batch["unique_frac"] < 0.8
+    assert np.bincount(idx).max() >= 6
+    # all pairs share the single query object (1-vs-N shape)
+    assert all(p[0] is batch["pairs"][0][0] for p in batch["pairs"])
