@@ -1,0 +1,226 @@
+"""Training-step policy comparison on the AIDS-like pair stream
+(DESIGN.md §11): the engine-routed custom-VJP packed paths against the
+dense-reference autodiff step.
+
+Policies (all taking the SAME raw {pairs, target} batch through one full
+train step — host prep + forward + backward + AdamW update):
+
+  dense_reference  — `jax.value_and_grad(simgnn_loss)` on the globally
+                     padded one-hot dense batch (the pre-§11 training path);
+  engine_reference — ScoringEngine path="reference": same math, but
+                     size-bucketed by the engine (pad-zero removal only);
+  packed_dense     — ScoringEngine path="packed_dense": FFD-packed tiles,
+                     dense block-diagonal aggregation, custom-VJP bodies;
+  packed_sparse    — ScoringEngine path="packed_sparse": packed-CSR edge
+                     aggregation forward AND backward (transpose-aggregate
+                     reuses the same edge planes).
+
+Also reports the packed_sparse step at accum_steps=4 — the pack-once /
+scan-tile-chunks accumulation mode — and the engine's own auto-dispatch
+decision for the stream. Grad parity of both packed paths is measured
+against the dense-reference autodiff anchor (max abs error over all param
+leaves). On this CPU-only container numbers are the trajectory baseline,
+not TPU times. Emits one `BENCH {json}` line per policy.
+
+Usage:  PYTHONPATH=src python benchmarks/train.py [--tiny] [--check]
+            [--batch 256] [--avg-degree 2.1] [--out train_bench.json]
+
+`--check` (CI gate): non-zero exit if packed-path grad parity drifts above
+1e-5, or if — at measured avg degree <= 4 — the packed-sparse step is not
+at least 1.5x faster than the dense reference step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/train.py` support
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import time_fn
+from repro.configs.simgnn_aids import CONFIG as CFG
+from repro.core.batching import pad_graphs
+from repro.core.engine import ScoringEngine
+from repro.core.simgnn import init_simgnn_params, simgnn_loss
+from repro.data.graphs import pair_stream
+from repro.train.optimizer import adamw_init
+from repro.train.step import build_simgnn_train_step
+
+GRAD_PARITY_BOUND = 1e-5
+MIN_SPARSE_SPEEDUP = 1.5
+
+
+def _dense_reference_step(peak_lr: float = 1e-3):
+    """The pre-engine training path, kept as the benchmark baseline: pad
+    every pair to the global max_nodes, one-hot the labels, autodiff
+    `simgnn_loss` — the SAME jitted optimizer apply as the engine-routed
+    step (`build_simgnn_apply`), so the comparison isolates the loss+grad
+    path."""
+    from repro.train.step import build_simgnn_apply
+
+    vg = jax.jit(jax.value_and_grad(simgnn_loss))
+    apply = build_simgnn_apply(peak_lr=peak_lr)
+
+    def step(params, opt_state, batch):
+        loss, grads = vg(params, _dense_batch(batch))
+        return apply(params, opt_state, loss, grads)
+
+    return step, vg
+
+
+def _dense_batch(batch):
+    b1 = pad_graphs([p[0] for p in batch["pairs"]], CFG.n_node_labels,
+                    CFG.max_nodes)
+    b2 = pad_graphs([p[1] for p in batch["pairs"]], CFG.n_node_labels,
+                    CFG.max_nodes)
+    return {"adj1": b1.adj, "feats1": b1.feats, "mask1": b1.mask,
+            "adj2": b2.adj, "feats2": b2.feats, "mask2": b2.mask,
+            "target": jnp.asarray(batch["target"])}
+
+
+def _max_grad_err(grads, ref_grads) -> float:
+    return max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32))))
+               for a, b in zip(jax.tree.leaves(grads),
+                               jax.tree.leaves(ref_grads)))
+
+
+def run(batch: int = 256, iters: int = 5, seed: int = 59,
+        avg_degree: float | None = None):
+    params = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+    opt_state = adamw_init(params)
+    b = next(pair_stream(seed, batch, avg_degree=avg_degree))
+    measured_degree = b["avg_degree"]
+
+    dense_step, dense_vg = _dense_reference_step()
+    engines = {name: ScoringEngine(params, CFG, path=path)
+               for name, path in (("engine_reference", "reference"),
+                                  ("packed_dense", "packed_dense"),
+                                  ("packed_sparse", "packed_sparse"))}
+    steps = {"dense_reference": dense_step}
+    steps.update((name, build_simgnn_train_step(eng))
+                 for name, eng in engines.items())
+    sparse_accum_step = build_simgnn_train_step(engines["packed_sparse"],
+                                                accum_steps=4)
+
+    # Grad parity vs the dense-reference autodiff anchor (identical batch).
+    ref_loss, ref_grads = dense_vg(params, _dense_batch(b))
+    parity = {"dense_reference": 0.0}
+    loss_err = {"dense_reference": 0.0}
+    for name, eng in engines.items():
+        loss, grads = eng.loss_and_grad(b["pairs"], b["target"],
+                                        params=params)
+        parity[name] = _max_grad_err(grads, ref_grads)
+        loss_err[name] = abs(float(loss) - float(ref_loss))
+
+    # The engine's own train-mode decision for this stream.
+    auto_plan = ScoringEngine(params, CFG).plan(b["pairs"], train=True)
+
+    records, seconds = [], {}
+    for name, step in list(steps.items()) + [("packed_sparse_accum4",
+                                              sparse_accum_step)]:
+        fn = lambda step=step: step(params, opt_state, b)
+        seconds[name] = time_fn(fn, warmup=1, iters=iters)
+        rec = {"bench": "train", "stream": "pair", "batch": batch,
+               "policy": name,
+               "measured_avg_degree": round(measured_degree, 3),
+               "seconds_per_step": round(seconds[name], 6),
+               "pairs_per_s": round(batch / seconds[name], 1),
+               "max_grad_err_vs_dense_autodiff":
+                   parity.get(name.replace("_accum4", ""), None),
+               "loss_err_vs_dense_autodiff":
+                   loss_err.get(name.replace("_accum4", ""), None)}
+        eng = engines.get(name.replace("_accum4", ""))
+        if eng is not None and eng.last_pack_stats:
+            st = eng.last_pack_stats
+            rec.update(n_tiles=st["n_tiles"],
+                       occupancy=round(st["occupancy_lhs"], 4))
+            if "edge_budget" in st:
+                rec.update(edge_budget=st["edge_budget"],
+                           overflow_budget=st["overflow_budget"],
+                           edge_occupancy=round(st["edge_occupancy"], 4))
+        if name == "packed_sparse_accum4":
+            rec["accum_steps"] = 4
+        records.append(rec)
+        print("BENCH " + json.dumps(rec))
+
+    summary = {"bench": "train", "stream": "pair", "batch": batch,
+               "policy": "summary",
+               "measured_avg_degree": round(measured_degree, 3),
+               "engine_auto_train_path": auto_plan.path,
+               "engine_reason": auto_plan.reason,
+               "sparse_step_speedup_vs_dense_reference":
+                   round(seconds["dense_reference"]
+                         / seconds["packed_sparse"], 3),
+               "packed_dense_step_speedup_vs_dense_reference":
+                   round(seconds["dense_reference"]
+                         / seconds["packed_dense"], 3),
+               "accum4_step_speedup_vs_dense_reference":
+                   round(seconds["dense_reference"]
+                         / seconds["packed_sparse_accum4"], 3),
+               "worst_packed_grad_parity": max(parity["packed_dense"],
+                                               parity["packed_sparse"]),
+               "worst_loss_err": max(loss_err.values())}
+    records.append(summary)
+    print("BENCH " + json.dumps(summary))
+    return records, summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small batch, few iters")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero on packed grad-parity drift or "
+                         "packed-sparse step slower than 1.5x dense "
+                         "reference at avg degree <= 4")
+    ap.add_argument("--out", type=str, default=None,
+                    help="write BENCH records to this JSON file")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--avg-degree", type=float, default=None,
+                    help="target stream degree (AIDS-like ~2.1 default)")
+    ap.add_argument("--iters", type=int, default=5)
+    a = ap.parse_args()
+    if a.tiny:
+        records, summary = run(batch=32, iters=2, avg_degree=a.avg_degree)
+    else:
+        records, summary = run(batch=a.batch, iters=a.iters,
+                               avg_degree=a.avg_degree)
+    if a.out:
+        with open(a.out, "w") as f:
+            json.dump(records, f, indent=1)
+    if a.check:
+        failures = []
+        if summary["worst_packed_grad_parity"] > GRAD_PARITY_BOUND:
+            failures.append(
+                f"packed-path grad parity "
+                f"{summary['worst_packed_grad_parity']:.2e} > "
+                f"{GRAD_PARITY_BOUND:.0e} vs dense-reference autodiff")
+        # The speed gate is calibrated for serving-scale batches (the §11
+        # acceptance point is batch 256): below ~64 pairs the per-batch
+        # packing cost cannot amortize and the parity gate alone applies.
+        if (summary["batch"] >= 64
+                and summary["measured_avg_degree"] <= 4.0
+                and summary["sparse_step_speedup_vs_dense_reference"]
+                < MIN_SPARSE_SPEEDUP):
+            failures.append(
+                "packed-sparse train step only "
+                f"{summary['sparse_step_speedup_vs_dense_reference']}x the "
+                f"dense reference (< {MIN_SPARSE_SPEEDUP}x) at degree "
+                f"{summary['measured_avg_degree']}")
+        if failures:
+            print("CHECK FAILED: " + "; ".join(failures))
+            sys.exit(1)
+        print("CHECK OK")
+
+
+if __name__ == "__main__":
+    main()

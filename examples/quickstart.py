@@ -29,7 +29,9 @@ def main():
     print("GED targets:                    ",
           [f"{t:.4f}" for t in batch["target"].tolist()])
 
-    loss = simgnn_loss(params, {k: jnp.asarray(v) for k, v in batch.items()})
+    dense_keys = ("adj1", "feats1", "mask1", "adj2", "feats2", "mask2",
+                  "target")
+    loss = simgnn_loss(params, {k: jnp.asarray(batch[k]) for k in dense_keys})
     print(f"untrained MSE vs exp(-nGED) targets: {float(loss):.4f}")
     print("run `python -m repro.launch.train --model simgnn` to train it.")
 

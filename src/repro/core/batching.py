@@ -59,6 +59,13 @@ class EdgeBatch(NamedTuple):
     weights: Array        # [B, E] normalized A' entries (0 for pad edges)
     edge_mask: Array      # [B, E]
 
+    @property
+    def edge_budget(self) -> int:
+        """The *realized* per-graph edge budget E — after any auto-grow in
+        `to_edge_batch` — so callers can carry it into the next batch of a
+        stream instead of re-deriving (and re-warning) every call."""
+        return self.senders.shape[-1]
+
 
 def pad_graphs(graphs: Sequence[dict], n_labels: int, max_nodes: int) -> GraphBatch:
     """graphs: list of {"adj": np [n,n], "labels": np [n] int}. Pads to max_nodes."""
@@ -192,7 +199,8 @@ class PackedEdges(NamedTuple):
 
 def pack_pairs(pairs: Sequence[tuple], node_budget: int = 64, *,
                slots_per_tile: int | None = None,
-               with_edges: bool = False, edge_budget: int | None = None):
+               with_edges: bool = False, edge_budget: int | None = None,
+               overflow_budget: int = 8):
     """First-fit-decreasing packing of graph pairs into `[T, node_budget]`
     tiles. Returns (PackedPairBatch, stats).
 
@@ -207,8 +215,11 @@ def pack_pairs(pairs: Sequence[tuple], node_budget: int = 64, *,
     DESIGN.md §9) that the packed-sparse megakernel aggregates from,
     extracted by `packed_pair_edges` at a quantized `edge_budget`
     (node_budget rows x a small neighbor-budget ladder, auto-grown to fit;
-    `kernels.ops.packed_edge_budget` is the sizing policy). stats then
-    gains the measured nnz / adjacency density per side.
+    `kernels.ops.packed_edge_budget` is the sizing policy) and an
+    `overflow_budget` floor for the COO spill — callers that stream many
+    batches pass the previous batch's realized `stats["overflow_budget"]`
+    back in so the compiled [T, E_ov] shape stays put. stats then gains
+    the measured nnz / adjacency density per side.
 
     stats: occupancy / pad-fraction per side plus tile shape — the measured
     quantities benchmarks/packed.py and benchmarks/sparse.py report per
@@ -278,7 +289,8 @@ def pack_pairs(pairs: Sequence[tuple], node_budget: int = 64, *,
         jnp.asarray(seg[1]),
         jnp.asarray(pair_mask), jnp.asarray(pair_index))
     if with_edges:
-        edges = packed_pair_edges(packed, edge_budget)
+        edges = packed_pair_edges(packed, edge_budget,
+                                  overflow_budget=overflow_budget)
         packed = packed._replace(edges=edges)
         nnz = [int(np.asarray(e.edge_mask).sum()) + int(np.asarray(o.edge_mask).sum())
                for e, o in ((edges.edges1, edges.overflow1),
@@ -300,9 +312,10 @@ def packed_pair_edges(packed: PackedPairBatch,
     """Extract per-tile packed-CSR A' edge lists from a packed tile batch
     (DESIGN.md §9).
 
-    Reuses the `to_edge_batch` non-zero extraction per side — the packed
-    adjacency is block-diagonal and the masked normalization factors per
-    graph, so each tile's A' non-zeros ARE the union of its graphs' A'
+    Extracts the same A' non-zeros as `to_edge_batch` (one vectorized
+    nonzero scan per side — this sits on the §11 training hot path) — the
+    packed adjacency is block-diagonal and the masked normalization factors
+    per graph, so each tile's A' non-zeros ARE the union of its graphs' A'
     non-zeros — then lays the (receiver-sorted) list out in
     D = edge_budget/node_budget ELLPACK neighbor planes (plane d, slot n =
     node n's d-th in-edge); edges beyond a node's D slots spill to the COO
@@ -310,47 +323,40 @@ def packed_pair_edges(packed: PackedPairBatch,
     auto-grow to fit (`edge_budget=None` sizes D to the realized max
     in-degree, leaving the overflow empty). Both sides share one budget.
     """
+    from repro.core.gcn import normalized_adjacency  # late import, no cycle
+
     nb = packed.node_budget
     if edge_budget is not None and edge_budget % nb:
         raise ValueError(f"edge_budget {edge_budget} must be a multiple of "
                          f"node_budget {nb} (CSR rows)")
     d_budget = (edge_budget // nb) if edge_budget else 1
+    # Fully vectorized extraction (no per-tile Python loop — the host pack
+    # sits on the training hot path since DESIGN.md §11): one nonzero scan
+    # per side; np.nonzero returns row-major order, so edges arrive sorted
+    # by (tile, receiver) and the in-row rank is a searchsorted subtraction.
     sides = []
     for adj, mask in ((packed.adj1, packed.mask1), (packed.adj2, packed.mask2)):
-        gb = GraphBatch(adj[..., :0], adj, mask,
-                        jnp.sum(mask, -1).astype(jnp.int32))
-        import warnings
-        with warnings.catch_warnings():   # full extraction: growth intended
-            warnings.simplefilter("ignore", RuntimeWarning)
-            coo = to_edge_batch(gb, 8)
-        snd, rcv, w = (np.asarray(coo.senders), np.asarray(coo.receivers),
-                       np.asarray(coo.weights))
-        emask = np.asarray(coo.edge_mask)
-        t = snd.shape[0]
-        # Rank of each edge within its receiver row (receivers are sorted
-        # row-major by the nonzero extraction).
-        per_tile = []
-        max_rank = 0
-        for i in range(t):
-            live = emask[i] > 0
-            r, s, ww = rcv[i, live], snd[i, live], w[i, live]
-            rank = np.arange(len(r)) - np.searchsorted(r, r, side="left")
-            per_tile.append((r, s, ww, rank))
-            if len(rank):
-                max_rank = max(max_rank, int(rank.max()) + 1)
-        sides.append((t, per_tile, max_rank))
+        a_norm = np.asarray(normalized_adjacency(adj, mask))
+        t = a_norm.shape[0]
+        tiles, rows, cols = np.nonzero(a_norm)
+        w = a_norm[tiles, rows, cols].astype(np.float32)
+        key = tiles.astype(np.int64) * nb + rows
+        rank = np.arange(key.size) - np.searchsorted(key, key, side="left")
+        max_rank = int(rank.max()) + 1 if key.size else 0
+        sides.append((t, tiles, rows, cols, w, rank, max_rank))
 
     d = max(d_budget, 1)
     if edge_budget is None:
-        d = next_pow2(max(s[2] for s in sides), floor=2)
+        d = next_pow2(max(s[6] for s in sides), floor=2)
     ov_need = 0
-    for t, per_tile, _ in sides:
-        for r, s, ww, rank in per_tile:
-            ov_need = max(ov_need, int(np.sum(rank >= d)))
+    for t, tiles, rows, cols, w, rank, _ in sides:
+        spill = rank >= d
+        if spill.any():
+            ov_need = max(ov_need, int(np.bincount(tiles[spill]).max()))
     e_ov = next_pow2(ov_need, floor=max(8, overflow_budget))
 
     out = []
-    for t, per_tile, _ in sides:
+    for t, tiles, rows, cols, w, rank, _ in sides:
         cs = np.zeros((t, nb * d), np.int32)
         cr = np.tile(np.tile(np.arange(nb, dtype=np.int32), d), (t, 1))
         cw = np.zeros((t, nb * d), np.float32)
@@ -359,14 +365,21 @@ def packed_pair_edges(packed: PackedPairBatch,
         or_ = np.zeros((t, e_ov), np.int32)
         ow = np.zeros((t, e_ov), np.float32)
         om = np.zeros((t, e_ov), np.float32)
-        for i, (r, s, ww, rank) in enumerate(per_tile):
-            fit = rank < d
-            slot = rank[fit] * nb + r[fit]      # plane-major (ELLPACK)
-            cs[i, slot], cw[i, slot], cm[i, slot] = s[fit], ww[fit], 1.0
-            n_ov = int(np.sum(~fit))
-            if n_ov:
-                os_[i, :n_ov], or_[i, :n_ov] = s[~fit], r[~fit]
-                ow[i, :n_ov], om[i, :n_ov] = ww[~fit], 1.0
+        fit = rank < d
+        # Plane-major (ELLPACK) flat slot: tile * NB·D + rank * NB + row.
+        slot = tiles[fit] * (nb * d) + rank[fit] * nb + rows[fit]
+        cs.reshape(-1)[slot] = cols[fit]
+        cw.reshape(-1)[slot] = w[fit]
+        cm.reshape(-1)[slot] = 1.0
+        if (~fit).any():
+            t_ov = tiles[~fit]            # sorted: position within tile is
+            pos = (np.arange(t_ov.size)   # offset from the tile's first
+                   - np.searchsorted(t_ov, t_ov, side="left"))
+            oslot = t_ov * e_ov + pos
+            os_.reshape(-1)[oslot] = cols[~fit]
+            or_.reshape(-1)[oslot] = rows[~fit]
+            ow.reshape(-1)[oslot] = w[~fit]
+            om.reshape(-1)[oslot] = 1.0
         out.append((EdgeBatch(jnp.asarray(cs), jnp.asarray(cr),
                               jnp.asarray(cw), jnp.asarray(cm)),
                     EdgeBatch(jnp.asarray(os_), jnp.asarray(or_),
@@ -396,6 +409,14 @@ def next_pow2(n: int, floor: int = 8) -> int:
     return p
 
 
+#: (requested, grown) budget pairs already warned about — a stream that
+#: outruns its `max_edges` on every batch re-derives the same grown budget
+#: each call; warning once per distinct growth (per process) keeps the log
+#: readable while `EdgeBatch.edge_budget` gives callers the realized value
+#: to feed back in (at which point growth — and the warning — stop).
+_GROW_WARNED: set[tuple[int, int]] = set()
+
+
 def to_edge_batch(batch: GraphBatch, max_edges: int) -> EdgeBatch:
     """Extract the normalized-adjacency non-zeros as a padded edge list.
 
@@ -404,9 +425,12 @@ def to_edge_batch(batch: GraphBatch, max_edges: int) -> EdgeBatch:
     Host-side (numpy); small graphs make this negligible (paper §3.2.2).
 
     If any graph's non-zero count exceeds `max_edges`, the whole batch's edge
-    budget auto-grows to the next power of two that fits (with a warning)
-    instead of killing the stream — the same degrade-to-padding policy as the
-    power-of-two overflow buckets of `bucket_for`. Pad edge slots carry
+    budget auto-grows to the next power of two that fits instead of killing
+    the stream — the same degrade-to-padding policy as the power-of-two
+    overflow buckets of `bucket_for`. The warning fires ONCE per distinct
+    (requested, grown) pair per process, not per batch; the realized budget
+    is surfaced as `EdgeBatch.edge_budget` (and in `pack_pairs` stats) so
+    stream callers reuse it on the next batch. Pad edge slots carry
     sender/receiver 0 and exact-zero weight/mask, so they are neutral in
     every aggregation.
     """
@@ -418,11 +442,15 @@ def to_edge_batch(batch: GraphBatch, max_edges: int) -> EdgeBatch:
     peak = max((len(r) for r, _ in nonzeros), default=0)
     if peak > max_edges:
         grown = next_pow2(peak, floor=max(8, max_edges))
-        import warnings
-        warnings.warn(
-            f"{peak} non-zeros exceed max_edges={max_edges}; growing the "
-            f"edge budget to {grown} (power-of-two) instead of raising",
-            RuntimeWarning, stacklevel=2)
+        if (max_edges, grown) not in _GROW_WARNED:
+            _GROW_WARNED.add((max_edges, grown))
+            import warnings
+            warnings.warn(
+                f"{peak} non-zeros exceed max_edges={max_edges}; growing the "
+                f"edge budget to {grown} (power-of-two) instead of raising "
+                "(warned once per stream: reuse EdgeBatch.edge_budget to "
+                "stop re-growing)",
+                RuntimeWarning, stacklevel=2)
         max_edges = grown
     senders = np.zeros((bsz, max_edges), np.int32)
     receivers = np.zeros((bsz, max_edges), np.int32)

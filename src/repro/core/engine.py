@@ -29,6 +29,15 @@ naming the chosen path, the pairs it covers, the oversize fallback split
 and the reason — `score()` then executes it. The serving wrapper is a thin
 shim that keeps its public `score_fn` contract.
 
+Since DESIGN.md §11 the engine dispatches BOTH directions of the model:
+`loss_and_grad()` plans with the same machinery but restricts dispatch to
+the VJP-capable paths (`TRAIN_PATHS`: reference | packed_dense |
+packed_sparse — the packed executors are the custom-VJP jnp twins in
+`kernels/grad.py`, since `pallas_call` has no autodiff rule), packs once
+per batch, and reuses the packed layout across gradient-accumulation
+microbatches. `train.step.build_simgnn_train_step` is the thin training
+shim, exactly as the query server is the thin serving shim.
+
 All compiled-callable caches (one per size bucket, `bucket_fns`) and packing
 statistics (`last_pack_stats`) live on the engine instance, so a serving
 process holds exactly one engine per model and every executable is reused
@@ -50,6 +59,11 @@ from repro.core.cache import EmbeddingCache, graph_key
 PATHS = ("reference", "two_kernel", "bucketed_mega", "packed_dense",
          "packed_sparse", "embedding_cache")
 PACKED_PATHS = ("packed_dense", "packed_sparse")
+#: paths with a VJP-capable executor (DESIGN.md §11): the dense reference
+#: is plain jnp, the packed paths have custom-VJP twins in kernels/grad.py.
+#: The bucketed paths run inside pallas_call (no autodiff rule) and the
+#: embedding cache serves stale non-differentiable activations.
+TRAIN_PATHS = ("reference", "packed_dense", "packed_sparse")
 
 
 def _empty_idx() -> np.ndarray:
@@ -119,6 +133,13 @@ class ScoringEngine:
     #: it the misses' GCN+Att recompute (now unbatched with the rest of the
     #: stream) erodes the head-only win (DESIGN.md §10 break-even).
     CACHE_MIN_HIT_FRAC = 0.5
+    #: tiles per backward chunk on the packed training paths (DESIGN.md
+    #: §11): the fwd+bwd of a chunk must fit cache — one monolithic
+    #: backward over every tile thrashes (measured ~1.5x slower on the
+    #: batch-256 stream), so the executor ALWAYS scans tile chunks,
+    #: accumulating loss and grads; gradient accumulation then falls out
+    #: for free (`accum_steps` just guarantees at least that many chunks).
+    TRAIN_TILE_CHUNK = 16
 
     def __init__(self, params, cfg, *, path: str = "auto",
                  node_budget: int | None = None,
@@ -155,6 +176,13 @@ class ScoringEngine:
         self._ref_fn: Callable | None = None
         self._embed_ref_fn: Callable | None = None
         self._head_fn: Callable | None = None
+        #: jitted value_and_grad executors, one per (train path, accum).
+        self._train_fns: dict[tuple[str, int], Callable] = {}
+        #: realized COO overflow budget of past sparse packs — reused as the
+        #: floor of later packs so one heavy batch doesn't make every
+        #: subsequent batch re-derive (and re-compile) a different [T, E_ov]
+        #: shape (the `to_edge_batch` realized-budget reuse, PR 5 satellite).
+        self._overflow_floor: int = 8
 
     # ------------------------------------------------------------- planning
 
@@ -188,9 +216,14 @@ class ScoringEngine:
             avg_degree=nnz / max(nodes, 1), density=nnz / max(cells, 1.0),
             has_labels=has_labels)
 
-    def _select(self, stats: WorkloadStats,
-                cache_hit_frac: float = 0.0) -> tuple[str, str]:
+    def _select(self, stats: WorkloadStats, cache_hit_frac: float = 0.0, *,
+                train: bool = False) -> tuple[str, str]:
         if self.path != "auto":
+            if train and self.path not in TRAIN_PATHS:
+                raise ValueError(
+                    f"path {self.path!r} has no VJP-capable executor; "
+                    f"training dispatch is restricted to {TRAIN_PATHS} "
+                    "(DESIGN.md §11)")
             return self.path, f"forced path={self.path}"
         if stats.n_pairs == 0:
             return "reference", "empty call"
@@ -199,15 +232,17 @@ class ScoringEngine:
             # gather); the bucketed megakernel is the dense-feats-capable
             # slot, though today's bucketed executor still builds one-hots
             # from labels (a dense-feats executor is ROADMAP backlog).
-            return ("bucketed_mega",
+            # Training has no bucketed executor, so it degrades to the
+            # reference (which will state the label contract on execution).
+            return (("reference" if train else "bucketed_mega"),
                     "graphs without int labels cannot take a packed path")
-        if cache_hit_frac >= self.CACHE_MIN_HIT_FRAC:
+        if not train and cache_hit_frac >= self.CACHE_MIN_HIT_FRAC:
             return ("embedding_cache",
                     f"{cache_hit_frac:.0%} of unique graphs have resident "
                     f"embeddings (>= {self.CACHE_MIN_HIT_FRAC:.0%}): only "
                     "the NTN+FCN head runs")
         if stats.n_pairs < self.MIN_PACK_PAIRS:
-            return ("bucketed_mega",
+            return (("reference" if train else "bucketed_mega"),
                     f"batch of {stats.n_pairs} too small to fill packed tiles"
                     f" (< {self.MIN_PACK_PAIRS})")
         if stats.avg_degree <= self.SPARSE_MAX_DEGREE:
@@ -237,8 +272,16 @@ class ScoringEngine:
             return k
         return tuple(key_of(p[side]) for side in (0, 1) for p in pairs)
 
-    def plan(self, pairs: Sequence[tuple]) -> ScorePlan:
-        """Measure the workload and decide — without running anything."""
+    def plan(self, pairs: Sequence[tuple], *,
+             train: bool = False) -> ScorePlan:
+        """Measure the workload and decide — without running anything.
+
+        With `train=True` the decision is restricted to the VJP-capable
+        paths (`TRAIN_PATHS`, DESIGN.md §11): the cached path never steers
+        (its embeddings carry no gradients), the small-batch / label-free
+        degrades land on the dense reference instead of the bucketed
+        megakernel, and the oversize fallback is the reference executor.
+        """
         # Density only steers the auto sparse/dense split and the sparse
         # edge budget; forced paths that ignore it skip the O(sum n_i^2)
         # adjacency scan.
@@ -247,17 +290,19 @@ class ScoringEngine:
         # The cache steers dispatch only when it could hold answers: keys
         # are hashed (O(sum n_i), host-side) iff the path is forced to the
         # cached one, or auto sees a non-empty cache — a cold cache costs
-        # auto streams nothing.
+        # auto streams nothing. Training never hashes: no path it may pick
+        # reads the cache.
         keys: tuple = ()
         hit_frac = 0.0
-        if len(pairs) and stats.has_labels and self.cache.capacity > 0 and (
+        if not train and len(pairs) and stats.has_labels \
+                and self.cache.capacity > 0 and (
                 self.path == "embedding_cache"
                 or (self.path == "auto" and len(self.cache))):
             keys = self._graph_keys(pairs)
             unique = set(keys)
             hit_frac = (sum(1 for k in unique if k in self.cache)
                         / len(unique))
-        path, reason = self._select(stats, hit_frac)
+        path, reason = self._select(stats, hit_frac, train=train)
         cached_idx = to_embed_idx = np.empty(0, np.int64)
         if path == "embedding_cache" and keys:
             hit = [k in self.cache for k in keys]
@@ -278,7 +323,8 @@ class ScoringEngine:
         else:
             fit_idx = np.empty(0, np.int64)
             over_idx = np.arange(len(pairs))
-        return ScorePlan(path=path, fallback=self._bucket_flavor,
+        fallback = "reference" if train else self._bucket_flavor
+        return ScorePlan(path=path, fallback=fallback,
                          fit_idx=fit_idx, over_idx=over_idx, stats=stats,
                          reason=reason, cached_idx=cached_idx,
                          to_embed_idx=to_embed_idx, graph_keys=keys)
@@ -324,14 +370,8 @@ class ScoringEngine:
         # sizes and FFD outcomes.
         slots = max(8, self.node_budget // 4)
         if sparse:
-            edge_budget = self.edge_budget
-            if edge_budget is None:
-                edge_budget = ops.packed_edge_budget(self.node_budget,
-                                                     stats.avg_degree)
-            packed, pstats = pack_pairs(pairs, self.node_budget,
-                                        slots_per_tile=slots,
-                                        with_edges=True,
-                                        edge_budget=edge_budget)
+            packed, pstats = self._pack_sparse(pairs, slots,
+                                               stats.avg_degree)
             s = ops.pair_score_sparse(self.params, packed,
                                       quantize_tiles=True)
         else:
@@ -341,6 +381,207 @@ class ScoringEngine:
                                       quantize_tiles=True)
         self.last_pack_stats = pstats
         out[idx] = unpack_pair_scores(s, packed, len(pairs))
+
+    def _pack_sparse(self, pairs, slots: int, avg_degree: float):
+        """Shared sparse packing (scoring + training): ladder-sized edge
+        budget, with the engine's realized overflow budget from earlier
+        calls as the floor so one heavy batch doesn't flip the compiled
+        [T, E_ov] shape back and forth across the stream."""
+        from repro.core.batching import pack_pairs
+        from repro.kernels import ops
+
+        edge_budget = self.edge_budget
+        if edge_budget is None:
+            edge_budget = ops.packed_edge_budget(self.node_budget, avg_degree)
+        packed, pstats = pack_pairs(pairs, self.node_budget,
+                                    slots_per_tile=slots, with_edges=True,
+                                    edge_budget=edge_budget,
+                                    overflow_budget=self._overflow_floor)
+        self._overflow_floor = max(self._overflow_floor,
+                                   pstats["overflow_budget"])
+        return packed, pstats
+
+    # -------------------------------------------------------- training path
+
+    def _train_fn(self, path: str, chunk_tiles: int) -> Callable:
+        """One jitted value_and_grad executor per (train path, chunk size) —
+        cached on the engine like `bucket_fns`, so a training loop reuses
+        one executable per padded shape. The function maps
+        (params, targets, *arrays) -> (sum of squared errors, d/dparams),
+        scanning `chunk_tiles`-tile chunks of the packed batch (cache
+        blocking AND accumulation microbatching in one mechanism — the
+        packed planes are packed once and only the scan slice moves)."""
+        key = (path, chunk_tiles)
+        if key not in self._train_fns:
+            import jax.numpy as jnp
+
+            if path == "reference":
+                from repro.core.simgnn import pair_score_from_labels
+
+                def sse(params, tgt, *arrays):
+                    return jnp.sum(
+                        (pair_score_from_labels(params, *arrays) - tgt) ** 2)
+            else:
+                from repro.kernels import grad as kgrad
+
+                score_fn = (kgrad.sparse_pair_score_grad
+                            if path == "packed_sparse"
+                            else kgrad.packed_pair_score_grad)
+
+                def sse(params, tgt, *arrays):
+                    # Pad pair slots score exact zero against target zero.
+                    return jnp.sum((score_fn(params, *arrays) - tgt) ** 2)
+
+            grad_fn = jax.value_and_grad(sse)
+            if path == "reference":
+                fn = grad_fn
+            else:
+                def fn(params, tgt, *arrays):
+                    t = tgt.shape[0]
+                    n_chunks = t // chunk_tiles
+                    if n_chunks <= 1:
+                        return grad_fn(params, tgt, *arrays)
+
+                    def chunk(x):
+                        return x.reshape((n_chunks, chunk_tiles)
+                                         + x.shape[1:])
+                    xs = tuple(chunk(x) for x in (tgt,) + arrays)
+
+                    def micro(acc, mb):
+                        s, g = grad_fn(params, mb[0], *mb[1:])
+                        return (acc[0] + s,
+                                jax.tree.map(jnp.add, acc[1], g)), None
+                    zero = (jnp.zeros((), jnp.float32),
+                            jax.tree.map(
+                                lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params))
+                    (s, g), _ = jax.lax.scan(micro, zero, xs)
+                    return s, g
+            self._train_fns[key] = jax.jit(fn)
+        return self._train_fns[key]
+
+    def _packed_sse(self, params, fit_pairs, fit_targets: np.ndarray,
+                    plan: ScorePlan, accum_steps: int):
+        """Sum-of-squared-errors + grads of the packed fit split: pack ONCE,
+        scatter targets to [T, P] pair slots, pad the tile axis to a chunk
+        multiple (pad tiles are all-zero: exact-zero scores, targets and
+        grads), run the chunk-scanning custom-VJP executor."""
+        import jax.numpy as jnp
+
+        from repro.core.batching import next_pow2, pack_pairs
+        from repro.kernels import grad as kgrad
+
+        sparse = plan.path == "packed_sparse"
+        slots = max(8, self.node_budget // 4)
+        if sparse:
+            packed, pstats = self._pack_sparse(fit_pairs, slots,
+                                               plan.stats.avg_degree)
+        else:
+            packed, pstats = pack_pairs(fit_pairs, self.node_budget,
+                                        slots_per_tile=slots)
+        self.last_pack_stats = pstats
+
+        pair_mask = np.asarray(packed.pair_mask)
+        pair_index = np.asarray(packed.pair_index)
+        tgt = np.zeros(pair_mask.shape, np.float32)
+        live = pair_mask > 0
+        tgt[live] = fit_targets[pair_index[live]]
+
+        # Chunk small enough that accum_steps chunks exist and that padding
+        # never exceeds the batch itself (all powers of two), then pad T to
+        # a chunk multiple — bounded pad-tile waste (< one chunk) vs. up to
+        # 2x for power-of-two T quantization.
+        t = pair_mask.shape[0]
+        chunk_tiles = min(self.TRAIN_TILE_CHUNK, next_pow2(t, floor=1))
+        while chunk_tiles > 1 and (-(-t // chunk_tiles)) < accum_steps:
+            chunk_tiles //= 2
+        pad = (-t) % chunk_tiles
+
+        def pad_tiles(x):
+            if not pad:
+                return x
+            return jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], 0)
+
+        arrays = tuple(pad_tiles(x)
+                       for x in kgrad.packed_arrays(packed, sparse=sparse))
+        fn = self._train_fn(plan.path, chunk_tiles)
+        return fn(params, pad_tiles(jnp.asarray(tgt)), *arrays)
+
+    def _reference_sse(self, params, pairs, targets: np.ndarray):
+        """SSE + grads of the dense-reference executor (the train-mode
+        fallback for oversized pairs and tiny batches), bucketed like
+        `_score_bucketed` with power-of-two overflow buckets."""
+        import jax.numpy as jnp
+
+        from repro.core.batching import bucket_pairs
+
+        fn = self._train_fn("reference", 1)
+        sse = jnp.zeros((), jnp.float32)
+        grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        for _, (lhs, rhs, idxs) in bucket_pairs(
+                pairs, self.cfg.n_node_labels, allow_oversize=True).items():
+            s, g = fn(params, jnp.asarray(targets[idxs]),
+                      lhs.adj, lhs.labels, lhs.mask,
+                      rhs.adj, rhs.labels, rhs.mask)
+            sse = sse + s
+            grads = jax.tree.map(jnp.add, grads, g)
+        return sse, grads
+
+    def loss_and_grad(self, pairs: Sequence[tuple], targets, *,
+                      params=None, accum_steps: int = 1):
+        """MSE loss and parameter gradients for one batch of graph pairs —
+        the differentiable twin of `score()` (DESIGN.md §11).
+
+        Plans with the same `ScorePlan` machinery but restricted to the
+        VJP-capable paths (`TRAIN_PATHS`); the oversize-fallback split is
+        preserved with the dense reference as the fallback executor. Packed
+        paths pack ONCE per call and ALWAYS scan the tiles in
+        `TRAIN_TILE_CHUNK`-sized chunks (cache blocking); `accum_steps`
+        (a power of two) guarantees at least that many chunks — gradient
+        accumulation without re-packing, since only the scan slice moves.
+
+        `params` defaults to the engine's own (serving) params; a training
+        loop passes its evolving copy. Returns `(loss, grads)` with
+        loss = mean_i (pred_i - target_i)^2 over the whole batch and grads
+        a pytree like `params` (fp32 accumulation).
+        """
+        import jax.numpy as jnp
+
+        if accum_steps < 1 or accum_steps & (accum_steps - 1):
+            raise ValueError(f"accum_steps must be a power of two, got "
+                             f"{accum_steps}")
+        params = self.params if params is None else params
+        plan = self.plan(pairs, train=True)
+        self.last_plan = plan
+        self.last_pack_stats = None
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if not len(pairs):
+            return jnp.zeros((), jnp.float32), zero
+        if not plan.stats.has_labels:
+            raise ValueError(
+                "graphs must carry int node labels ('labels'); a dense-"
+                "feats executor is not implemented yet (ROADMAP open item)")
+        targets = np.asarray(targets, np.float32).reshape(-1)
+        if targets.shape[0] != len(pairs):
+            raise ValueError(f"{len(pairs)} pairs but {targets.shape[0]} "
+                             "targets")
+        sse = jnp.zeros((), jnp.float32)
+        grads = zero
+        if len(plan.fit_idx):
+            s, g = self._packed_sse(params, [pairs[i] for i in plan.fit_idx],
+                                    targets[plan.fit_idx], plan, accum_steps)
+            sse = sse + s
+            grads = jax.tree.map(jnp.add, grads, g)
+        if len(plan.over_idx):
+            s, g = self._reference_sse(params,
+                                       [pairs[i] for i in plan.over_idx],
+                                       targets[plan.over_idx])
+            sse = sse + s
+            grads = jax.tree.map(jnp.add, grads, g)
+        n = float(len(pairs))
+        return sse / n, jax.tree.map(lambda x: x / n, grads)
 
     # ------------------------------------------------- embedding-cached path
 

@@ -96,12 +96,15 @@ def ged_target(n_edits: int, n1: int, n2: int) -> float:
 def pair_stream(seed: int, batch: int, max_nodes: int = 64,
                 max_edits: int = 8,
                 avg_degree: float | None = None) -> Iterator[dict]:
-    """Infinite stream of padded pair batches ready for simgnn_loss.
+    """Infinite stream of graph-pair batches for SimGNN training.
 
-    Yields dicts with adj1/feats1/mask1, adj2/feats2/mask2, target — all numpy,
-    shaped for a single global batch (the caller shards over the mesh) — plus
-    the batch's realized `density` / `avg_degree` (mean over both sides).
-    `avg_degree` targets a degree other than the AIDS-like default (~2.1).
+    Yields dicts carrying BOTH batch views: `pairs` (the raw graph-pair
+    dicts + `target`, what the engine-routed train step consumes — it packs
+    them itself, DESIGN.md §11) and the padded dense arrays
+    adj1/feats1/mask1, adj2/feats2/mask2 (what the dense-reference loss
+    consumes directly) — plus the batch's realized `density` / `avg_degree`
+    (mean over both sides). `avg_degree` targets a degree other than the
+    AIDS-like default (~2.1).
     """
     from repro.core.batching import pad_graphs
 
@@ -119,6 +122,7 @@ def pair_stream(seed: int, batch: int, max_nodes: int = 64,
         b2 = pad_graphs(g2s, N_NODE_LABELS, max_nodes)
         gs = g1s + g2s
         yield {
+            "pairs": list(zip(g1s, g2s)),
             "adj1": b1.adj, "feats1": b1.feats, "mask1": b1.mask,
             "adj2": b2.adj, "feats2": b2.feats, "mask2": b2.mask,
             "target": np.asarray(targets, np.float32),

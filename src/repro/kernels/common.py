@@ -13,9 +13,24 @@ The `*_block` functions below are the in-VMEM compute bodies shared by
 `fused_pair.py` (DESIGN.md §7): they take *values* already read from refs,
 are variadic over layer count, and accumulate in fp32 regardless of the
 input dtype (bf16 in / fp32 accumulate / out-dtype store).
+
+The gather/segment aggregation bodies additionally carry `jax.custom_vjp`
+rules (DESIGN.md §11): the backward pass of an edge aggregation is the SAME
+aggregation with the sender and receiver planes swapped (A' is symmetric in
+structure; its transpose-multiply is another edge sweep), so the packed-CSR
+/ COO layouts built for the forward pass serve the backward pass unchanged
+— no transposed layout is ever materialized. Integer index planes get
+`float0` cotangents (indices have no tangent space), which also keeps
+autodiff from tracing through the gathers. These rules are what makes the
+packed scoring paths differentiable end-to-end (`kernels/grad.py`,
+`core.engine.ScoringEngine.loss_and_grad`).
 """
 
 from __future__ import annotations
+
+import functools
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +92,43 @@ def read_layer_refs(refs) -> list[tuple[jax.Array, jax.Array]]:
             for i in range(len(refs) // 2)]
 
 
+# ------------------------------------------------------------- VJP plumbing
+
+def _int_zeros(x: jax.Array) -> np.ndarray:
+    """float0 cotangent for an integer index plane: indices have no tangent
+    space, and returning float0 (rather than float zeros) is what custom_vjp
+    requires for int-dtype primals."""
+    return np.zeros(np.shape(x), jax.dtypes.float0)
+
+
+@jax.custom_vjp
+def label_gather(w: jax.Array, labels: jax.Array) -> jax.Array:
+    """First-layer one-hot elimination as a differentiable gather:
+    `one_hot(labels) @ W == W[labels]` exactly, so the forward pass is a row
+    gather (no [M, n_labels] one-hot ever exists). The custom backward keeps
+    the same discipline: dW = one_hot(labels)^T @ g is ONE MXU-shaped
+    [n_labels, M] x [M, F] contraction instead of autodiff's per-row
+    scatter-add. w [L, F], labels [M] int32 -> [M, F] fp32."""
+    return jnp.take(w.astype(jnp.float32), labels, axis=0)
+
+
+def _label_gather_fwd(w, labels):
+    return label_gather(w, labels), (w, labels)
+
+
+def _label_gather_bwd(res, g):
+    w, labels = res
+    m = labels.shape[0]
+    l_ids = jax.lax.broadcasted_iota(jnp.int32, (w.shape[0], m), 0)
+    onehot_t = (labels[None, :] == l_ids).astype(jnp.float32)   # [L, M]
+    dw = jnp.dot(onehot_t, g.astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    return dw.astype(w.dtype), _int_zeros(labels)
+
+
+label_gather.defvjp(_label_gather_fwd, _label_gather_bwd)
+
+
 # ------------------------------------------------------------ in-VMEM bodies
 
 def normalize_adjacency_block(adj: jax.Array, mask: jax.Array) -> jax.Array:
@@ -113,9 +165,9 @@ def gcn_layers_block(adj_norm: jax.Array, h: jax.Array | None,
     gb, n, _ = adj_norm.shape
     for li, (w, b) in enumerate(layer_wb):
         if li == 0 and labels is not None:
-            # Structural feature sparsity: one-hot first layer as a gather.
-            hw = jnp.take(w.astype(jnp.float32), labels.reshape(gb * n),
-                          axis=0)
+            # Structural feature sparsity: one-hot first layer as a gather
+            # (custom VJP: dW1 is one one-hot contraction, no scatter).
+            hw = label_gather(w, labels.reshape(gb * n))
         else:
             # Feature Transformation (paper MULT+ACC): one 2D MXU matmul for
             # the whole graph block — (GB*N, Fin) @ (Fin, Fout).
@@ -131,6 +183,30 @@ def gcn_layers_block(adj_norm: jax.Array, h: jax.Array | None,
     return h
 
 
+def _edge_aggregate(senders, receivers, weights, hw):
+    """Raw segment-sum edge aggregation body (no VJP rule — see the public
+    `edge_aggregate_block` wrapper)."""
+    gb, n, f = hw.shape
+    e = senders.shape[-1]
+    gathered = jnp.take_along_axis(hw, senders[..., None], axis=1)  # [GB,E,F]
+    msgs = (gathered * weights[..., None].astype(jnp.float32)).reshape(gb * e, f)
+    offs = jnp.arange(gb, dtype=jnp.int32)[:, None] * n              # [GB,1]
+    flat = jax.ops.segment_sum(msgs, (receivers + offs).reshape(gb * e),
+                               num_segments=gb * n)
+    return flat.reshape(gb, n, f)
+
+
+def _edge_weight_cotangent(senders, receivers, hw, g):
+    """dL/dw for one edge list: per edge, <g[receiver], hw[sender]> — the
+    same two gathers as the forward pass, reduced over F. [GB, E] fp32."""
+    g_r = jnp.take_along_axis(g.astype(jnp.float32), receivers[..., None],
+                              axis=1)
+    h_s = jnp.take_along_axis(hw.astype(jnp.float32), senders[..., None],
+                              axis=1)
+    return jnp.sum(g_r * h_s, axis=-1)
+
+
+@jax.custom_vjp
 def edge_aggregate_block(senders: jax.Array, receivers: jax.Array,
                          weights: jax.Array, hw: jax.Array) -> jax.Array:
     """In-kernel segment-sum aggregation from a tile-local edge list:
@@ -147,23 +223,35 @@ def edge_aggregate_block(senders: jax.Array, receivers: jax.Array,
     as `core.batching.edge_aggregate` (parity-tested), but flattened to ONE
     segment reduction over [GB*E] with per-block receiver offsets — one
     large scatter schedules better than GB small ones on every backend.
+
+    Custom VJP (DESIGN.md §11): the cotangent of `hw` is the SAME edge sweep
+    with sender/receiver planes swapped (transpose-aggregation), so the
+    backward pass reuses the forward layout; pad edges stay exactly neutral
+    in both directions (their weight is an exact zero factor of every
+    product).
     """
-    gb, n, f = hw.shape
-    e = senders.shape[-1]
-    gathered = jnp.take_along_axis(hw, senders[..., None], axis=1)  # [GB,E,F]
-    msgs = (gathered * weights[..., None].astype(jnp.float32)).reshape(gb * e, f)
-    offs = jnp.arange(gb, dtype=jnp.int32)[:, None] * n              # [GB,1]
-    flat = jax.ops.segment_sum(msgs, (receivers + offs).reshape(gb * e),
-                               num_segments=gb * n)
-    return flat.reshape(gb, n, f)
+    return _edge_aggregate(senders, receivers, weights, hw)
 
 
-def overflow_aggregate_block(ov_snd: jax.Array, ov_rcv: jax.Array,
-                             ov_w: jax.Array, hw: jax.Array) -> jax.Array:
-    """Aggregate the small COO overflow list (in-degree > D spill) as a
-    one-hot contraction: out = onehot(receivers)^T @ (w * hw[senders]).
-    With E_ov <= ~32 the [N, E_ov] @ [E_ov, F] matmul is a few percent of a
-    dense layer and stays MXU-shaped — no scatter anywhere in the kernel."""
+def _edge_aggregate_fwd(senders, receivers, weights, hw):
+    return _edge_aggregate(senders, receivers, weights, hw), (
+        senders, receivers, weights, hw)
+
+
+def _edge_aggregate_bwd(res, g):
+    senders, receivers, weights, hw = res
+    d_hw = _edge_aggregate(receivers, senders, weights, g)    # swapped planes
+    d_w = _edge_weight_cotangent(senders, receivers, hw, g)
+    return (_int_zeros(senders), _int_zeros(receivers),
+            d_w.astype(weights.dtype), d_hw.astype(hw.dtype))
+
+
+edge_aggregate_block.defvjp(_edge_aggregate_fwd, _edge_aggregate_bwd)
+
+
+def _overflow_aggregate(ov_snd, ov_rcv, ov_w, hw):
+    """Raw COO one-hot contraction body (no VJP rule — see the public
+    `overflow_aggregate_block` wrapper)."""
     gb, n, f = hw.shape
     e_ov = ov_snd.shape[-1]
     gathered = jnp.take_along_axis(hw, ov_snd[..., None], axis=1)  # [GB,Eo,F]
@@ -174,6 +262,56 @@ def overflow_aggregate_block(ov_snd: jax.Array, ov_rcv: jax.Array,
                                preferred_element_type=jnp.float32)
 
 
+@jax.custom_vjp
+def overflow_aggregate_block(ov_snd: jax.Array, ov_rcv: jax.Array,
+                             ov_w: jax.Array, hw: jax.Array) -> jax.Array:
+    """Aggregate the small COO overflow list (in-degree > D spill) as a
+    one-hot contraction: out = onehot(receivers)^T @ (w * hw[senders]).
+    With E_ov <= ~32 the [N, E_ov] @ [E_ov, F] matmul is a few percent of a
+    dense layer and stays MXU-shaped — no scatter anywhere in the kernel.
+
+    Custom VJP (DESIGN.md §11): dL/d(hw) is the same one-hot contraction
+    with the sender/receiver roles swapped — a literal argument swap of the
+    forward body — so the backward pass stays MXU-shaped too."""
+    return _overflow_aggregate(ov_snd, ov_rcv, ov_w, hw)
+
+
+def _overflow_aggregate_fwd(ov_snd, ov_rcv, ov_w, hw):
+    return _overflow_aggregate(ov_snd, ov_rcv, ov_w, hw), (
+        ov_snd, ov_rcv, ov_w, hw)
+
+
+def _overflow_aggregate_bwd(res, g):
+    ov_snd, ov_rcv, ov_w, hw = res
+    d_hw = _overflow_aggregate(ov_rcv, ov_snd, ov_w, g)       # swapped planes
+    d_w = _edge_weight_cotangent(ov_snd, ov_rcv, hw, g)
+    return (_int_zeros(ov_snd), _int_zeros(ov_rcv),
+            d_w.astype(ov_w.dtype), d_hw.astype(hw.dtype))
+
+
+overflow_aggregate_block.defvjp(_overflow_aggregate_fwd,
+                                _overflow_aggregate_bwd)
+
+
+def _csr_aggregate(nbr, nbr_w, ov_snd, ov_rcv, ov_w, hw):
+    """Raw packed-CSR aggregation body (no VJP rule — see the public
+    `csr_aggregate_block` wrapper)."""
+    gb, n, f = hw.shape
+    d = nbr.shape[-1] // n
+    gathered = jnp.take_along_axis(hw, nbr[..., None], axis=1)   # [GB,N*D,F]
+    msgs = (gathered * nbr_w[..., None].astype(jnp.float32)).reshape(gb, d,
+                                                                     n * f)
+    # Plane reduction as D-1 statically-unrolled adds of contiguous
+    # [GB, N*F] planes: keeps the reduction a pure vector add chain (a
+    # strided axis-reduce defeats vectorization on the interpret path).
+    out = msgs[:, 0]
+    for k in range(1, d):
+        out = out + msgs[:, k]
+    return (out.reshape(gb, n, f)
+            + _overflow_aggregate(ov_snd, ov_rcv, ov_w, hw))
+
+
+@jax.custom_vjp
 def csr_aggregate_block(nbr: jax.Array, nbr_w: jax.Array,
                         ov_snd: jax.Array, ov_rcv: jax.Array,
                         ov_w: jax.Array, hw: jax.Array) -> jax.Array:
@@ -187,20 +325,94 @@ def csr_aggregate_block(nbr: jax.Array, nbr_w: jax.Array,
     (`overflow_aggregate_block`) — Accel-GCN's degree-aware workload split:
     regular rows on the vector path, outlier rows on the matrix path. Pad
     slots carry exact-zero weights.
+
+    Custom VJP (DESIGN.md §11): the backward pass runs over the SAME
+    ELLPACK/COO planes. The receiver of ELL slot s is the implicit s % N,
+    so gathering the output cotangent by receiver is a free plane tiling;
+    the message cotangents then scatter to the *senders* with one flat
+    segment-sum (the `edge_aggregate_block` idiom) while the COO tail is
+    again a literal sender/receiver swap of the one-hot contraction. No
+    transposed edge layout is ever built.
     """
+    return _csr_aggregate(nbr, nbr_w, ov_snd, ov_rcv, ov_w, hw)
+
+
+def _csr_aggregate_fwd(nbr, nbr_w, ov_snd, ov_rcv, ov_w, hw):
+    return _csr_aggregate(nbr, nbr_w, ov_snd, ov_rcv, ov_w, hw), (
+        nbr, nbr_w, ov_snd, ov_rcv, ov_w, hw)
+
+
+def _csr_bwd_outputs(res, g32, d_hw):
+    """Shared tail of both CSR backward rules: the per-slot weight
+    cotangents (orientation-exact regardless of A' symmetry — XLA DCEs
+    them when only param grads are requested) and the output tuple.
+    Receiver gather is free: ELL slot d*N + r reads g[r] — D plane tiles.
+    """
+    nbr, nbr_w, ov_snd, ov_rcv, ov_w, hw = res
+    d = nbr.shape[-1] // hw.shape[1]
+    g_r = jnp.tile(g32, (1, d, 1))                               # [GB,N*D,F]
+    h_s = jnp.take_along_axis(hw.astype(jnp.float32), nbr[..., None], axis=1)
+    d_nbr_w = jnp.sum(g_r * h_s, axis=-1)                        # [GB, N*D]
+    d_ov_w = _edge_weight_cotangent(ov_snd, ov_rcv, hw, g32)
+    return (_int_zeros(nbr), d_nbr_w.astype(nbr_w.dtype),
+            _int_zeros(ov_snd), _int_zeros(ov_rcv),
+            d_ov_w.astype(ov_w.dtype), d_hw.astype(hw.dtype))
+
+
+def _csr_aggregate_bwd(res, g):
+    nbr, nbr_w, ov_snd, ov_rcv, ov_w, hw = res
     gb, n, f = hw.shape
     d = nbr.shape[-1] // n
-    gathered = jnp.take_along_axis(hw, nbr[..., None], axis=1)   # [GB,N*D,F]
-    msgs = (gathered * nbr_w[..., None].astype(jnp.float32)).reshape(gb, d,
-                                                                     n * f)
-    # Plane reduction as D-1 statically-unrolled adds of contiguous
-    # [GB, N*F] planes: keeps the reduction a pure vector add chain (a
-    # strided axis-reduce defeats vectorization on the interpret path).
-    out = msgs[:, 0]
-    for k in range(1, d):
-        out = out + msgs[:, k]
-    return (out.reshape(gb, n, f)
-            + overflow_aggregate_block(ov_snd, ov_rcv, ov_w, hw))
+    g32 = g.astype(jnp.float32)
+    # Generic transpose-aggregation: gather the cotangent by the implicit
+    # receivers (plane tiling), scatter to senders with one flat
+    # segment-sum (the edge_aggregate_block idiom).
+    msgs = (jnp.tile(g32, (1, d, 1))
+            * nbr_w[..., None].astype(jnp.float32)).reshape(gb * n * d, f)
+    offs = jnp.arange(gb, dtype=jnp.int32)[:, None] * n
+    d_hw = jax.ops.segment_sum(msgs, (nbr + offs).reshape(gb * n * d),
+                               num_segments=gb * n).reshape(gb, n, f)
+    d_hw = d_hw + _overflow_aggregate(ov_rcv, ov_snd, ov_w, g32)
+    return _csr_bwd_outputs(res, g32, d_hw)
+
+
+csr_aggregate_block.defvjp(_csr_aggregate_fwd, _csr_aggregate_bwd)
+
+
+@jax.custom_vjp
+def csr_aggregate_block_sym(nbr: jax.Array, nbr_w: jax.Array,
+                            ov_snd: jax.Array, ov_rcv: jax.Array,
+                            ov_w: jax.Array, hw: jax.Array) -> jax.Array:
+    """`csr_aggregate_block` for a structurally SYMMETRIC A' — which every
+    normalized adjacency in this codebase is (undirected graphs + self
+    loops, and symmetry survives the block-diagonal packing). Identical
+    forward; the backward exploits A'^T == A': the `hw` cotangent
+    d_hw = A'^T g = A' g is the SAME scatter-free forward aggregation
+    applied to the output cotangent — plane adds + the small one-hot
+    contraction, zero scatters in the backward pass (the generic rule's
+    scatter-by-sender segment-sum disappears). Note the symmetry argument
+    only holds for the COMBINED ELL+COO split: a single edge may sit in the
+    ELL planes while its mirror spilled to the overflow list, so neither
+    part is symmetric alone — the backward therefore re-runs the whole
+    combined aggregation, never the parts separately. Per-slot weight
+    cotangents keep the generic (orientation-exact) rule.
+
+    `gcn_layers_edge_block` (the GCN stack, where A' is symmetric by
+    construction) uses this variant; callers with directed/asymmetric edge
+    lists must use `csr_aggregate_block`.
+    """
+    return _csr_aggregate(nbr, nbr_w, ov_snd, ov_rcv, ov_w, hw)
+
+
+def _csr_aggregate_sym_bwd(res, g):
+    nbr, nbr_w, ov_snd, ov_rcv, ov_w, hw = res
+    g32 = g.astype(jnp.float32)
+    # A' symmetric: transpose-aggregation IS the forward aggregation on g.
+    d_hw = _csr_aggregate(nbr, nbr_w, ov_snd, ov_rcv, ov_w, g32)
+    return _csr_bwd_outputs(res, g32, d_hw)
+
+
+csr_aggregate_block_sym.defvjp(_csr_aggregate_fwd, _csr_aggregate_sym_bwd)
 
 
 def gcn_layers_edge_block(nbr: jax.Array, nbr_w: jax.Array,
@@ -222,14 +434,17 @@ def gcn_layers_edge_block(nbr: jax.Array, nbr_w: jax.Array,
     gb, n = mask.shape
     for li, (w, b) in enumerate(layer_wb):
         if li == 0 and labels is not None:
-            # Structural feature sparsity: one-hot first layer as a gather.
-            hw = jnp.take(w.astype(jnp.float32), labels.reshape(gb * n),
-                          axis=0)
+            # Structural feature sparsity: one-hot first layer as a gather
+            # (custom VJP: dW1 is one one-hot contraction, no scatter).
+            hw = label_gather(w, labels.reshape(gb * n))
         else:
             hw = jnp.dot(h.reshape(gb * n, -1), w.astype(jnp.float32),
                          preferred_element_type=jnp.float32)
         hw = (hw + b.astype(jnp.float32)).reshape(gb, n, -1)
-        h = csr_aggregate_block(nbr, nbr_w, ov_snd, ov_rcv, ov_w, hw)
+        # A' is symmetric here by construction (undirected + self loops),
+        # so the sym variant's scatter-free transpose-aggregate backward
+        # applies (DESIGN.md §11).
+        h = csr_aggregate_block_sym(nbr, nbr_w, ov_snd, ov_rcv, ov_w, hw)
         h = jnp.maximum(h, 0.0) * mask[..., None]
     return h
 
@@ -267,17 +482,9 @@ def segment_onehot(seg: jax.Array, mask: jax.Array,
     return (seg[:, None, :] == p_ids).astype(jnp.float32) * mask[:, None, :]
 
 
-def segment_att_pool_block(h: jax.Array, mask: jax.Array, seg: jax.Array,
-                           att_w: jax.Array, n_segments: int) -> jax.Array:
-    """Att pooling per *segment* of a packed tile (DESIGN.md §8).
-
-    h [GB, N, F], seg [GB, N] int32 in [0, P) -> [GB, P, F] — the per-graph
-    leading dim of `att_pool_block` becomes a segment axis: the per-graph
-    mean/softmax-sigmoid/sum reductions turn into contractions against the
-    segment one-hot S, so all three stay MXU-shaped batched matmuls. Empty
-    segments (pad pair slots) yield all-zero embeddings.
-    """
-    s = segment_onehot(seg, mask, n_segments)                          # [GB,P,N]
+def _seg_att_pool_from_onehot(h, mask, s, att_w):
+    """Segment Att pooling given a precomputed segment one-hot S [GB, P, N]
+    (the shared body of `segment_att_pool_block`'s forward AND backward)."""
     counts = jnp.maximum(jnp.sum(s, axis=-1, keepdims=True), 1.0)      # [GB,P,1]
     batched = (((2,), (1,)), ((0,), (0,)))
     mean_h = jax.lax.dot_general(s, h, batched,
@@ -291,6 +498,49 @@ def segment_att_pool_block(h: jax.Array, mask: jax.Array, seg: jax.Array,
     att = jax.nn.sigmoid(jnp.sum(h * c_node, axis=-1)) * mask          # [GB,N]
     return jax.lax.dot_general(s, att[..., None] * h, batched,
                                preferred_element_type=jnp.float32)     # [GB,P,F]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def segment_att_pool_block(h: jax.Array, mask: jax.Array, seg: jax.Array,
+                           att_w: jax.Array, n_segments: int) -> jax.Array:
+    """Att pooling per *segment* of a packed tile (DESIGN.md §8).
+
+    h [GB, N, F], seg [GB, N] int32 in [0, P) -> [GB, P, F] — the per-graph
+    leading dim of `att_pool_block` becomes a segment axis: the per-graph
+    mean/softmax-sigmoid/sum reductions turn into contractions against the
+    segment one-hot S, so all three stay MXU-shaped batched matmuls. Empty
+    segments (pad pair slots) yield all-zero embeddings.
+
+    Custom VJP (DESIGN.md §11): the segment one-hot S is built once in the
+    forward pass and saved as a residual — the backward differentiates the
+    pure-matmul body against the SAME S (matmul transposes are matmuls), so
+    the int32 `seg` plane never enters autodiff (float0 cotangent) and the
+    iota-compare that builds S is never re-traced. Pad node slots are zero
+    rows of S, so their cotangents are exact zeros in both directions.
+    """
+    s = segment_onehot(seg, mask, n_segments)                          # [GB,P,N]
+    return _seg_att_pool_from_onehot(h, mask, s, att_w)
+
+
+def _segment_att_pool_fwd(h, mask, seg, att_w, n_segments):
+    s = segment_onehot(seg, mask, n_segments)
+    return _seg_att_pool_from_onehot(h, mask, s, att_w), (
+        h, mask, seg, s, att_w)
+
+
+def _segment_att_pool_bwd(n_segments, res, g):
+    h, mask, seg, s, att_w = res
+    _, pull = jax.vjp(_seg_att_pool_from_onehot, h, mask, s, att_w)
+    d_h, d_mask, d_s, d_att_w = pull(g.astype(jnp.float32))
+    # S = onehot(seg) * mask[:, None, :] also carries mask sensitivity:
+    # dS/dmask[g, n] is 1 only at row seg[g, n], fetched by one gather.
+    d_mask = d_mask + jnp.take_along_axis(d_s, seg[:, None, :],
+                                          axis=1)[:, 0, :]
+    return (d_h.astype(h.dtype), d_mask.astype(mask.dtype),
+            _int_zeros(seg), d_att_w.astype(att_w.dtype))
+
+
+segment_att_pool_block.defvjp(_segment_att_pool_fwd, _segment_att_pool_bwd)
 
 
 def ntn_fcn_block(h1: jax.Array, h2: jax.Array, wt: jax.Array, vt: jax.Array,

@@ -26,6 +26,8 @@ For SimGNN pair scoring there are four kernel paths (path selection lives in
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -209,9 +211,11 @@ def packed_edge_budget(node_budget: int, avg_degree: float | None = None) -> int
     4096-entry dense block at NB=64. The tail beyond D spills to the small
     COO overflow list (degree-aware split), so a modest D never loses
     edges; `packed_pair_edges` also auto-grows if a whole stream outruns
-    the budget."""
+    the budget. Half-way degrees round UP (floor(d + 0.5), not Python's
+    banker's round(): round(2.5) == 2 made degree 2.5 share D=4 with the
+    1.5–2.4 band while 3.5 rounded up — an inconsistent ladder step)."""
     d = 2.5 if avg_degree is None else avg_degree
-    need = int(round(d)) + 2               # ~p75 of molecule-like streams;
+    need = math.floor(d + 0.5) + 2         # ~p75 of molecule-like streams;
     for per_node in (4, 6, 8, 12, 16, 24, 32, 48, 64):   # tail -> overflow
         if per_node >= need:
             return node_budget * per_node

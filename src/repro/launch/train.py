@@ -25,6 +25,7 @@ import numpy as np
 
 def train_simgnn(args):
     from repro.configs.simgnn_aids import CONFIG as scfg
+    from repro.core.engine import ScoringEngine
     from repro.core.simgnn import init_simgnn_params
     from repro.data.graphs import pair_stream
     from repro.train.optimizer import adamw_init
@@ -33,15 +34,18 @@ def train_simgnn(args):
 
     params = init_simgnn_params(jax.random.PRNGKey(args.seed), scfg)
     opt_state = adamw_init(params)
-    step_fn = jax.jit(build_simgnn_train_step(peak_lr=args.lr))
+    # The engine dispatches the forward AND backward passes (DESIGN.md §11):
+    # it measures each batch and picks the packed-sparse / packed-dense /
+    # reference executor; the step itself contains no path selection.
+    engine = ScoringEngine(params, scfg)
+    step_fn = build_simgnn_train_step(engine, peak_lr=args.lr)
     stream = pair_stream(args.seed, args.batch, max_nodes=scfg.max_nodes)
     batches = {}
 
     def batch_fn(step):            # deterministic per step for restartability
         while step not in batches:
             batches[len(batches)] = next(stream)
-        b = batches[step]
-        return {k: jnp.asarray(v) for k, v in b.items()}
+        return batches[step]
 
     def on_metrics(step, rec):
         print(f"step {step:5d} loss {rec['loss']:.5f} "

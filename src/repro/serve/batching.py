@@ -36,7 +36,8 @@ class FlushStats:
     requests: int = 0              # total requests flushed
     size_flushes: int = 0          # flushes triggered by reaching max_batch
     deadline_flushes: int = 0      # flushes triggered by max_wait_s
-    manual_flushes: int = 0        # explicit flush() calls
+    manual_flushes: int = 0        # explicit flush() calls that ran a batch
+                                   # (empty manual flushes are no-ops)
     occupancy_sum: float = 0.0     # sum of len(batch)/max_batch per flush
 
     @property
@@ -52,6 +53,11 @@ class MicroBatcher:
     oldest pending request has already waited `max_wait_s`. Between arrivals
     the serving loop calls `poll()` (or checks `deadline_in()`) so a lull in
     traffic cannot strand a partial batch. `clock` is injectable for tests.
+
+    Return contract (uniform across submit/poll/flush): `None` means
+    NOTHING RAN — no batch was dispatched. A list (possibly empty, if
+    `run_batch` returned no results) means a batch ran. An empty `flush()`
+    is therefore `None`, not `[]`, and does not count in `FlushStats`.
     """
     run_batch: Callable            # list[request] -> list[result]
     max_batch: int = 256
@@ -89,8 +95,12 @@ class MicroBatcher:
         return None
 
     def flush(self, reason: str = "manual"):
+        """Run the pending group now. Returns the batch results, or None if
+        the queue was empty (nothing ran — indistinguishable from a real
+        zero-result batch otherwise); empty flushes leave `stats` untouched.
+        """
         if not self.pending:
-            return []
+            return None
         batch, self.pending = self.pending, []
         self.oldest_ts = None
         st = self.stats

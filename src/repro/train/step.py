@@ -7,6 +7,11 @@ update then runs fully sharded (ZeRO-3 equivalent). Optional int8 gradient
 compression (distributed/compression.py) targets the cross-pod DCN
 all-reduce. Gradient accumulation microbatches via lax.scan when
 `accum_steps > 1`.
+
+The SimGNN step delegates its entire forward/backward to
+`ScoringEngine.loss_and_grad` (DESIGN.md §11): path selection between the
+dense reference and the custom-VJP packed executors lives in the engine,
+never here.
 """
 
 from __future__ import annotations
@@ -85,13 +90,14 @@ def build_train_step(cfg: ModelConfig, rt: Runtime, *,
     return step_fn
 
 
-def build_simgnn_train_step(*, peak_lr: float = 1e-3,
-                            max_grad_norm: float = 1.0):
-    """Train step for the paper's model (MSE on exp(-nGED) targets)."""
-    from repro.core.simgnn import simgnn_loss
-
-    def step_fn(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(simgnn_loss)(params, batch)
+def build_simgnn_apply(*, peak_lr: float = 1e-3,
+                       max_grad_norm: float = 1.0):
+    """The jitted SimGNN optimizer half-step (clip -> cosine schedule ->
+    AdamW), shared by `build_simgnn_train_step` and any baseline that must
+    pair a different loss with the SAME update (benchmarks/train.py's
+    dense-reference policy) — one source for the schedule constants."""
+    @jax.jit
+    def apply(params, opt_state, loss, grads):
         grads, grad_norm = opt.clip_by_global_norm(grads, max_grad_norm)
         lr = opt.cosine_schedule(opt_state.step, peak_lr=peak_lr, warmup=50,
                                  total=2_000)
@@ -99,5 +105,29 @@ def build_simgnn_train_step(*, peak_lr: float = 1e-3,
                                              weight_decay=1e-4)
         return params, opt_state, {"loss": loss, "grad_norm": grad_norm,
                                    "lr": lr, "step": opt_state.step}
+
+    return apply
+
+
+def build_simgnn_train_step(engine, *, peak_lr: float = 1e-3,
+                            max_grad_norm: float = 1.0,
+                            accum_steps: int = 1):
+    """Train step for the paper's model (MSE on exp(-nGED) targets), routed
+    through a `core.engine.ScoringEngine` (DESIGN.md §11) — the engine is
+    the single dispatch point for BOTH directions of the model, so no path
+    selection (packing, bucketing, kernel choice) happens here.
+
+    batch: {"pairs": [(g1, g2), ...], "target": [B]} — raw graph-pair dicts
+    (e.g. `data.graphs.pair_stream` batches). The engine packs once per
+    batch and reuses the packed layout across `accum_steps` accumulation
+    microbatches; the optimizer update runs in one jitted region.
+    """
+    apply = build_simgnn_apply(peak_lr=peak_lr, max_grad_norm=max_grad_norm)
+
+    def step_fn(params, opt_state, batch):
+        loss, grads = engine.loss_and_grad(batch["pairs"], batch["target"],
+                                           params=params,
+                                           accum_steps=accum_steps)
+        return apply(params, opt_state, loss, grads)
 
     return step_fn

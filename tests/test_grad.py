@@ -1,0 +1,336 @@
+"""Differentiable engine scoring tests (DESIGN.md §11).
+
+Gradient parity matrix: `ScoringEngine.loss_and_grad` on the custom-VJP
+packed executors (packed_dense / packed_sparse) against the dense-reference
+autodiff anchor `jax.value_and_grad(simgnn_loss)` — f32 at the 1e-5
+acceptance bound (per-leaf max abs error), bf16 at the 2e-2 band — across
+odd/even batches, isolated nodes and a COO-overflow-exercising high-degree
+configuration. Plus: train-mode plan restriction (VJP-capable paths only,
+reference fallback for oversize), pack-once accumulation equivalence, the
+engine-routed train step, the no-path-branching contract for train/step.py,
+and hypothesis properties pinning that the VJP of pad slots is exactly
+zero.
+"""
+
+import ast
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.batching import pack_pairs, pad_graphs
+from repro.core.engine import TRAIN_PATHS, ScoringEngine
+from repro.core.simgnn import (SimGNNConfig, init_simgnn_params, simgnn_loss)
+from repro.data.graphs import random_graph
+
+CFG = SimGNNConfig()
+PARAMS = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+
+#: f32 acceptance bound for engine grads vs dense-reference autodiff
+#: (per-leaf max abs error; ISSUE/benchmarks/train.py use the same bound).
+GRAD_ATOL_F32 = 1e-5
+GRAD_ATOL_BF16 = 2e-2
+
+
+def _mixed_pairs(seed, n_pairs, max_n=64, avg_degree=None):
+    rng = np.random.default_rng(seed)
+    return [(random_graph(rng, int(rng.integers(5, max_n + 1)),
+                          avg_degree=avg_degree),
+             random_graph(rng, int(rng.integers(5, max_n + 1)),
+                          avg_degree=avg_degree))
+            for _ in range(n_pairs)]
+
+
+def _targets(seed, n):
+    return np.random.default_rng(1000 + seed).uniform(0.0, 1.0, n).astype(
+        np.float32)
+
+
+def _ref_loss_and_grad(params, pairs, targets, max_nodes=64):
+    """The independent autodiff anchor: `jax.value_and_grad(simgnn_loss)`
+    on the one-hot dense-padded batch — no engine, no custom VJPs."""
+    b1 = pad_graphs([p[0] for p in pairs], CFG.n_node_labels, max_nodes)
+    b2 = pad_graphs([p[1] for p in pairs], CFG.n_node_labels, max_nodes)
+    batch = {"adj1": b1.adj, "feats1": b1.feats, "mask1": b1.mask,
+             "adj2": b2.adj, "feats2": b2.feats, "mask2": b2.mask,
+             "target": jnp.asarray(targets)}
+    return jax.value_and_grad(simgnn_loss)(params, batch)
+
+
+def _assert_grad_close(got, ref, atol):
+    leaves_got = jax.tree.leaves(got)
+    leaves_ref = jax.tree.leaves(ref)
+    assert len(leaves_got) == len(leaves_ref)
+    worst = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(leaves_got, leaves_ref))
+    assert worst <= atol, f"max grad err {worst:.2e} > {atol:.0e}"
+
+
+def _cast(tree, dtype):
+    if dtype == "float32":
+        return tree
+    return jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16)
+        if x.dtype == jnp.float32 else x, tree)
+
+
+# ----------------------------------------------------- gradient parity matrix
+
+@pytest.mark.parametrize("batch", (7, 12))        # odd pads every policy
+@pytest.mark.parametrize("dtype", ("float32", "bfloat16"))
+@pytest.mark.parametrize("path", ("packed_dense", "packed_sparse"))
+def test_grad_parity_matrix(path, dtype, batch):
+    pairs = _mixed_pairs(batch, batch)
+    targets = _targets(batch, batch)
+    params = _cast(PARAMS, dtype)
+    engine = ScoringEngine(params, CFG, path=path)
+    loss, grads = engine.loss_and_grad(pairs, targets)
+    ref_loss, ref_grads = _ref_loss_and_grad(_cast(PARAMS, dtype), pairs,
+                                             targets)
+    atol = GRAD_ATOL_F32 if dtype == "float32" else GRAD_ATOL_BF16
+    assert abs(float(loss) - float(ref_loss)) <= atol
+    _assert_grad_close(grads, ref_grads, atol)
+    assert engine.last_plan.path == path
+    assert engine.last_pack_stats is not None
+
+
+def test_grad_parity_isolated_nodes():
+    """Graphs with isolated (but real) nodes: the self-loop-only rows keep
+    exact grad parity through both packed aggregations."""
+    rng = np.random.default_rng(3)
+    pairs = []
+    for _ in range(6):
+        g1 = random_graph(rng, 12)
+        g2 = random_graph(rng, 9)
+        for g in (g1, g2):          # sever one node completely
+            g["adj"][0, :] = g["adj"][:, 0] = 0.0
+        pairs.append((g1, g2))
+    targets = _targets(3, 6)
+    for path in ("packed_dense", "packed_sparse"):
+        engine = ScoringEngine(PARAMS, CFG, path=path)
+        loss, grads = engine.loss_and_grad(pairs, targets)
+        ref_loss, ref_grads = _ref_loss_and_grad(PARAMS, pairs, targets)
+        assert abs(float(loss) - float(ref_loss)) <= GRAD_ATOL_F32
+        _assert_grad_close(grads, ref_grads, GRAD_ATOL_F32)
+
+
+def test_grad_parity_through_coo_overflow():
+    """A deliberately tiny per-node edge budget (D=2 << degree) forces the
+    COO overflow aggregation — whose custom VJP is the sender/receiver swap
+    — into the backward pass."""
+    pairs = _mixed_pairs(4, 8, max_n=32, avg_degree=6.0)
+    targets = _targets(4, 8)
+    engine = ScoringEngine(PARAMS, CFG, path="packed_sparse",
+                           edge_budget=64 * 2)
+    loss, grads = engine.loss_and_grad(pairs, targets)
+    assert engine.last_pack_stats["overflow_budget"] > 0
+    ref_loss, ref_grads = _ref_loss_and_grad(PARAMS, pairs, targets)
+    assert abs(float(loss) - float(ref_loss)) <= GRAD_ATOL_F32
+    _assert_grad_close(grads, ref_grads, GRAD_ATOL_F32)
+
+
+# ------------------------------------------------------- train-mode planning
+
+def test_train_plan_restricted_to_vjp_capable_paths():
+    engine = ScoringEngine(PARAMS, CFG)
+    pairs = _mixed_pairs(5, 12)
+    plan = engine.plan(pairs, train=True)
+    assert plan.path in TRAIN_PATHS
+    assert plan.fallback == "reference"
+    # tiny batches degrade to the reference, not the bucketed megakernel
+    tiny = engine.plan(_mixed_pairs(6, 2), train=True)
+    assert tiny.path == "reference"
+
+
+def test_train_rejects_non_vjp_paths():
+    for path in ("bucketed_mega", "two_kernel", "embedding_cache"):
+        engine = ScoringEngine(PARAMS, CFG, path=path)
+        with pytest.raises(ValueError, match="VJP-capable"):
+            engine.loss_and_grad(_mixed_pairs(7, 6), _targets(7, 6))
+
+
+def test_train_oversize_pairs_fall_back_to_reference():
+    rng = np.random.default_rng(8)
+    pairs = _mixed_pairs(8, 6) + [(random_graph(rng, 90),
+                                   random_graph(rng, 20))]
+    targets = _targets(8, 7)
+    engine = ScoringEngine(PARAMS, CFG, path="packed_sparse")
+    loss, grads = engine.loss_and_grad(pairs, targets)
+    plan = engine.last_plan
+    assert len(plan.fit_idx) == 6 and list(plan.over_idx) == [6]
+    assert plan.fallback == "reference"
+    # parity against the forced-reference engine (itself anchored to
+    # simgnn_loss autodiff by the matrix above), which buckets the same way
+    ref_engine = ScoringEngine(PARAMS, CFG, path="reference")
+    ref_loss, ref_grads = ref_engine.loss_and_grad(pairs, targets)
+    assert abs(float(loss) - float(ref_loss)) <= GRAD_ATOL_F32
+    _assert_grad_close(grads, ref_grads, GRAD_ATOL_F32)
+
+
+def test_reference_executor_matches_simgnn_loss_autodiff():
+    """The engine's reference train executor (label-gather variant) against
+    the one-hot `simgnn_loss` anchor: same loss, same grads."""
+    pairs = _mixed_pairs(9, 10)
+    targets = _targets(9, 10)
+    engine = ScoringEngine(PARAMS, CFG, path="reference")
+    loss, grads = engine.loss_and_grad(pairs, targets)
+    ref_loss, ref_grads = _ref_loss_and_grad(PARAMS, pairs, targets)
+    assert abs(float(loss) - float(ref_loss)) <= GRAD_ATOL_F32
+    _assert_grad_close(grads, ref_grads, GRAD_ATOL_F32)
+
+
+def test_empty_batch_loss_and_grad():
+    engine = ScoringEngine(PARAMS, CFG)
+    loss, grads = engine.loss_and_grad([], [])
+    assert float(loss) == 0.0
+    assert all(float(jnp.max(jnp.abs(g))) == 0.0
+               for g in jax.tree.leaves(grads))
+
+
+def test_label_free_graphs_rejected_in_training():
+    pairs = [({"adj": g1["adj"]}, g2) for g1, g2 in _mixed_pairs(10, 6)]
+    engine = ScoringEngine(PARAMS, CFG)
+    with pytest.raises(ValueError, match="int node labels"):
+        engine.loss_and_grad(pairs, _targets(10, 6))
+
+
+# ------------------------------------------- pack once, accumulate in chunks
+
+def test_accumulation_microbatches_match_single_shot():
+    pairs = _mixed_pairs(11, 16)
+    targets = _targets(11, 16)
+    engine = ScoringEngine(PARAMS, CFG, path="packed_sparse")
+    loss1, grads1 = engine.loss_and_grad(pairs, targets, accum_steps=1)
+    stats1 = dict(engine.last_pack_stats)
+    loss4, grads4 = engine.loss_and_grad(pairs, targets, accum_steps=4)
+    # same single packing (pack once per batch), same totals
+    assert engine.last_pack_stats["n_tiles"] == stats1["n_tiles"]
+    assert abs(float(loss1) - float(loss4)) <= 1e-6
+    _assert_grad_close(grads4, grads1, 1e-6)
+
+
+def test_accum_steps_must_be_power_of_two():
+    engine = ScoringEngine(PARAMS, CFG)
+    with pytest.raises(ValueError, match="power of two"):
+        engine.loss_and_grad(_mixed_pairs(12, 8), _targets(12, 8),
+                             accum_steps=3)
+
+
+# ----------------------------------------------------- engine-routed training
+
+def test_train_step_goes_through_engine():
+    from repro.train.optimizer import adamw_init
+    from repro.train.step import build_simgnn_train_step
+
+    pairs = _mixed_pairs(13, 8)
+    batch = {"pairs": pairs, "target": _targets(13, 8)}
+    engine = ScoringEngine(PARAMS, CFG)
+    step = build_simgnn_train_step(engine, peak_lr=1e-3)
+    params, opt_state, metrics = step(PARAMS, adamw_init(PARAMS), batch)
+    assert engine.last_plan.path in TRAIN_PATHS
+    assert set(metrics) == {"loss", "grad_norm", "lr", "step"}
+    assert float(metrics["loss"]) > 0
+    # params actually moved
+    moved = any(float(jnp.max(jnp.abs(a - b))) > 0
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(PARAMS)))
+    assert moved
+
+
+def test_train_step_no_direct_path_branching():
+    """The refactor contract (mirror of the serve-side test): train/step.py
+    must not name or branch on scoring paths, packing or kernels — that
+    logic lives only in core/engine.py."""
+    import repro.train.step as ts
+    tree = ast.parse(inspect.getsource(ts))
+    for node in ast.walk(tree):            # drop docstrings: code only
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Module)):
+            if (node.body and isinstance(node.body[0], ast.Expr)
+                    and isinstance(node.body[0].value, ast.Constant)):
+                node.body = node.body[1:]
+    src = ast.unparse(tree)
+    for needle in ("pack_pairs", "bucket_pairs", "pair_score_packed",
+                   "pair_score_sparse", "pair_score_megakernel",
+                   "simgnn_loss", "packed_sparse", "packed_dense",
+                   "oversize"):
+        assert needle not in src, f"path selection leaked into train: {needle}"
+
+
+# --------------------------------------------- pad-slot VJP-zero properties
+# (plain seeded checks; tests/test_grad_properties.py drives the same
+# helpers through hypothesis over the full (seed, n, d/p) space in CI)
+
+def check_csr_vjp_of_pad_slots_is_exactly_zero(seed, n, d):
+    """Pad ELLPACK slots (exact-zero weight, sender 0) must contribute
+    EXACTLY zero cotangent: d_hw rows of nodes that send no real edge are
+    bit-zero, and the pad slots' stored sender indices are irrelevant."""
+    from repro.kernels.common import csr_aggregate_block
+
+    rng = np.random.default_rng(seed)
+    live = rng.random((1, n * d)) < 0.5
+    nbr = rng.integers(0, n, (1, n * d)).astype(np.int32) * live
+    w = (rng.uniform(0.5, 1.5, (1, n * d)).astype(np.float32) * live)
+    e_ov = 4
+    ovs = np.zeros((1, e_ov), np.int32)
+    ovr = np.zeros((1, e_ov), np.int32)
+    ovw = np.zeros((1, e_ov), np.float32)
+    hw = rng.normal(size=(1, n, 3)).astype(np.float32)
+    g = rng.normal(size=(1, n, 3)).astype(np.float32)
+
+    def pullback(nbr_arr):
+        f = lambda x: jnp.vdot(csr_aggregate_block(
+            jnp.asarray(nbr_arr), jnp.asarray(w), jnp.asarray(ovs),
+            jnp.asarray(ovr), jnp.asarray(ovw), x), jnp.asarray(g))
+        return np.asarray(jax.grad(f)(jnp.asarray(hw)))
+
+    d_hw = pullback(nbr)
+    real_senders = set(nbr[0, live[0]].tolist())
+    for node in range(n):
+        if node not in real_senders:
+            assert (d_hw[0, node] == 0).all(), node
+    # pad slots' sender indices are dead: scrambling them changes nothing
+    scrambled = nbr.copy()
+    scrambled[~live] = rng.integers(0, n, int((~live).sum()))
+    np.testing.assert_array_equal(d_hw, pullback(scrambled))
+
+
+def check_segment_att_pool_vjp_of_pad_nodes_is_exactly_zero(seed, n, p):
+    """Mask-0 node slots of a packed tile receive bit-zero `h` cotangents
+    through the segment attention pooling VJP."""
+    from repro.kernels.common import segment_att_pool_block
+
+    rng = np.random.default_rng(seed)
+    n_real = rng.integers(1, n + 1)
+    mask = (np.arange(n) < n_real).astype(np.float32)[None]
+    seg = (rng.integers(0, p, (1, n)).astype(np.int32) * mask).astype(
+        np.int32)
+    h = rng.normal(size=(1, n, 5)).astype(np.float32)
+    att_w = rng.normal(size=(5, 5)).astype(np.float32) / np.sqrt(5)
+    g = rng.normal(size=(1, p, 5)).astype(np.float32)
+
+    f = lambda x: jnp.vdot(segment_att_pool_block(
+        x, jnp.asarray(mask), jnp.asarray(seg), jnp.asarray(att_w), p),
+        jnp.asarray(g))
+    d_h = np.asarray(jax.grad(f)(jnp.asarray(h)))
+    assert (d_h[0, n_real:] == 0).all()
+    if n_real < n:   # pad rows of h are dead inputs too
+        h2 = h.copy()
+        h2[0, n_real:] = rng.normal(size=(n - n_real, 5))
+        np.testing.assert_array_equal(d_h,
+                                      np.asarray(jax.grad(f)(jnp.asarray(h2))))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_csr_vjp_pad_slots_zero_seeded(seed):
+    check_csr_vjp_of_pad_slots_is_exactly_zero(seed, n=4 + 2 * seed,
+                                               d=1 + seed % 3)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_segment_att_pool_vjp_pad_nodes_zero_seeded(seed):
+    check_segment_att_pool_vjp_of_pad_nodes_is_exactly_zero(
+        seed, n=4 + 2 * seed, p=1 + seed % 3)

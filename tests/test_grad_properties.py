@@ -1,0 +1,26 @@
+"""Hypothesis drivers for the pad-slot VJP-zero properties (DESIGN.md §11):
+the custom backward passes of the packed aggregation/pooling bodies must
+give pad slots EXACTLY zero cotangents over the whole (seed, size, budget)
+space — the plain seeded checks live in tests/test_grad.py and run without
+hypothesis; here hypothesis explores the space in CI."""
+
+import pytest
+
+from test_grad import (check_csr_vjp_of_pad_slots_is_exactly_zero,
+                       check_segment_att_pool_vjp_of_pad_nodes_is_exactly_zero)
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 2**31 - 1), st.integers(4, 12), st.integers(1, 3))
+def test_csr_vjp_of_pad_slots_is_exactly_zero(seed, n, d):
+    check_csr_vjp_of_pad_slots_is_exactly_zero(seed, n, d)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 2**31 - 1), st.integers(4, 10), st.integers(1, 3))
+def test_segment_att_pool_vjp_of_pad_nodes_is_exactly_zero(seed, n, p):
+    check_segment_att_pool_vjp_of_pad_nodes_is_exactly_zero(seed, n, p)

@@ -225,12 +225,14 @@ def test_microbatcher_flush_stats():
     now[0] = 2.0                       # deadline passes with 1 pending
     assert mb.poll() == [8]
     mb.submit(9)
-    mb.flush()                         # manual, occupancy 1/4
+    assert mb.flush() == [9]           # manual, occupancy 1/4
+    assert mb.flush() is None          # empty queue: nothing ran (None, not
+    assert mb.poll() is None           # an empty result list) ...
     st = mb.stats
     assert st.batches == 4 and st.requests == 10
     assert st.size_flushes == 2
     assert st.deadline_flushes == 1
-    assert st.manual_flushes == 1
+    assert st.manual_flushes == 1      # ... and does not count as a flush
     assert st.mean_occupancy == pytest.approx((1 + 1 + 0.25 + 0.25) / 4)
 
 

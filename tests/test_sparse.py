@@ -118,6 +118,54 @@ def test_to_edge_batch_grows_instead_of_raising():
                                np.asarray(dense), rtol=1e-5, atol=1e-6)
 
 
+def test_to_edge_batch_grow_warns_once_per_stream():
+    """Regression (PR 5 satellite): a stream that outruns `max_edges` on
+    every batch must warn ONCE for a given growth, not per call, and the
+    realized budget is surfaced on the result for callers to reuse."""
+    adj, mask = _rand_graph_batch(np.random.default_rng(5), b=2, n=14,
+                                  p_edge=0.7)
+    gb = GraphBatch(jnp.zeros((2, 14, 0)), jnp.asarray(adj),
+                    jnp.asarray(mask), jnp.asarray(mask.sum(-1), jnp.int32))
+    small = 9       # a (requested, grown) key no other test uses
+    with warnings.catch_warnings(record=True) as first:
+        warnings.simplefilter("always")
+        eb = to_edge_batch(gb, max_edges=small)
+    assert sum("growing the edge budget" in str(w.message)
+               for w in first) == 1
+    assert eb.edge_budget == eb.senders.shape[-1] > small   # realized budget
+    with warnings.catch_warnings(record=True) as again:
+        warnings.simplefilter("always")
+        eb2 = to_edge_batch(gb, max_edges=small)            # same stream
+    assert not any("growing the edge budget" in str(w.message)
+                   for w in again)
+    assert eb2.edge_budget == eb.edge_budget
+    # feeding the realized budget back means no growth at all
+    with warnings.catch_warnings(record=True) as reused:
+        warnings.simplefilter("always")
+        to_edge_batch(gb, max_edges=eb.edge_budget)
+    assert not reused
+
+
+# --------------------------------------------------- edge-budget ladder
+
+def test_packed_edge_budget_half_way_degrees():
+    """Regression (PR 5 satellite): Python round() is banker's rounding, so
+    degree 2.5 used to round DOWN to the D=4 rung of the 1.5-2.4 band while
+    3.5 rounded up — half-way degrees must all round up (floor(d + 0.5))."""
+    nb = 64
+    ladder = lambda d: ops.packed_edge_budget(nb, d) // nb
+    assert ladder(2.5) == 6        # floor(3.0)+2=5 -> rung 6 (was 4)
+    assert ladder(3.5) == 6        # floor(4.0)+2=6 -> rung 6 (unchanged)
+    assert ladder(4.5) == 8        # floor(5.0)+2=7 -> rung 8 (was 6)
+    # the band below each half-way point keeps its old rung
+    assert ladder(2.4) == 4 and ladder(1.5) == 4
+    assert ladder(3.4) == 6 and ladder(4.4) == 6
+    # monotone: a denser measured stream never gets a smaller budget
+    degrees = [1.0 + 0.1 * i for i in range(120)]
+    rungs = [ladder(d) for d in degrees]
+    assert all(a <= b for a, b in zip(rungs, rungs[1:]))
+
+
 def test_next_pow2():
     assert next_pow2(0) == 8 and next_pow2(8) == 8
     assert next_pow2(9) == 16 and next_pow2(200) == 256

@@ -14,6 +14,7 @@ import numpy as np
 import pytest
 
 from repro.configs.simgnn_aids import CONFIG as SCFG
+from repro.core.engine import ScoringEngine
 from repro.core.simgnn import init_simgnn_params, pair_score
 from repro.data.graphs import pair_stream, query_pairs
 from repro.serve.batching import simgnn_query_server
@@ -24,40 +25,34 @@ from repro.train.step import build_simgnn_train_step
 def _train(n_steps=60, batch=32, seed=0, stream=None):
     params = init_simgnn_params(jax.random.PRNGKey(seed), SCFG)
     opt = adamw_init(params)
-    step = jax.jit(build_simgnn_train_step(peak_lr=2e-3))
+    # The engine routes the forward AND backward passes (DESIGN.md §11):
+    # auto dispatch picks packed-sparse on this molecule-like stream.
+    step = build_simgnn_train_step(ScoringEngine(params, SCFG),
+                                   peak_lr=2e-3)
     stream = stream or pair_stream(seed, batch)
     losses = []
     for _ in range(n_steps):
-        b = {k: jnp.asarray(v) for k, v in next(stream).items()}
-        params, opt, m = step(params, opt, b)
+        params, opt, m = step(params, opt, next(stream))
         losses.append(float(m["loss"]))
     return params, losses
 
 
-def _binary_stream(seed, batch):
+def _binary_batch(seed, batch):
     """Pairs that are either identical (target 1.0) or unrelated (0.2) — a
     discrimination learnable in CI time (full GED regression needs thousands
     of steps; the paper trains offline and accelerates inference)."""
-    import numpy as np
-    from repro.core.batching import pad_graphs
     from repro.data.graphs import random_graph
     rng = np.random.default_rng(seed)
-    while True:
-        g1s, g2s, targets = [], [], []
-        for _ in range(batch):
-            g1 = random_graph(rng)
-            if rng.random() < 0.5:
-                g2, t = g1, 1.0
-            else:
-                g2, t = random_graph(rng), 0.2
-            g1s.append(g1)
-            g2s.append(g2)
-            targets.append(t)
-        b1 = pad_graphs(g1s, 29, 64)
-        b2 = pad_graphs(g2s, 29, 64)
-        yield {"adj1": b1.adj, "feats1": b1.feats, "mask1": b1.mask,
-               "adj2": b2.adj, "feats2": b2.feats, "mask2": b2.mask,
-               "target": np.asarray(targets, np.float32)}
+    pairs, targets = [], []
+    for _ in range(batch):
+        g1 = random_graph(rng)
+        if rng.random() < 0.5:
+            g2, t = g1, 1.0
+        else:
+            g2, t = random_graph(rng), 0.2
+        pairs.append((g1, g2))
+        targets.append(t)
+    return {"pairs": pairs, "target": np.asarray(targets, np.float32)}
 
 
 def test_training_reduces_loss():
@@ -73,20 +68,24 @@ def test_trained_model_ranks_similarity():
     identical above unrelated pairs. (Full GED generalization needs
     thousands of steps — the paper trains offline and accelerates
     inference, so CI asserts the memorization/ranking sanity level.)"""
-    fixed = next(_binary_stream(0, 48))
-    batch = {k: jnp.asarray(v) for k, v in fixed.items()}
+    from repro.core.batching import pad_graphs
+
+    batch = _binary_batch(0, 48)
     params = init_simgnn_params(jax.random.PRNGKey(0), SCFG)
     opt = adamw_init(params)
-    step = jax.jit(build_simgnn_train_step(peak_lr=5e-3))
+    engine = ScoringEngine(params, SCFG)
+    step = build_simgnn_train_step(engine, peak_lr=5e-3)
     losses = []
     for _ in range(250):
         params, opt, m = step(params, opt, batch)
         losses.append(float(m["loss"]))
     assert losses[-1] < losses[0] * 0.25, (losses[0], losses[-1])
-    pred = np.asarray(pair_score(
-        params, batch["adj1"], batch["feats1"], batch["mask1"],
-        batch["adj2"], batch["feats2"], batch["mask2"]))
-    tgt = np.asarray(fixed["target"])
+    assert engine.last_plan.path in ("packed_sparse", "packed_dense")
+    b1 = pad_graphs([p[0] for p in batch["pairs"]], 29, 64)
+    b2 = pad_graphs([p[1] for p in batch["pairs"]], 29, 64)
+    pred = np.asarray(pair_score(params, b1.adj, b1.feats, b1.mask,
+                                 b2.adj, b2.feats, b2.mask))
+    tgt = np.asarray(batch["target"])
     mean_id = pred[tgt > 0.5].mean()
     mean_far = pred[tgt < 0.5].mean()
     assert mean_id > mean_far + 0.15, (mean_id, mean_far)
@@ -121,9 +120,10 @@ def test_microbatcher_amortization():
         r = mb.submit(i)
         if r:
             outs += r
-    outs += mb.flush()
+    outs += mb.flush() or []        # None contract: nothing ran -> no batch
     assert outs == [0, 2, 4, 6, 8, 10, 12, 14, 16, 18]
     assert calls == [4, 4, 2]       # batched, not 10 single calls
+    assert mb.flush() is None       # drained queue: nothing ran, not []
 
 
 class _FakeClock:
