@@ -32,3 +32,31 @@ def emit(name: str, us_per_call: float, derived: str):
 def tpu_model_time(flops: float, bytes_hbm: float) -> float:
     """Single-chip roofline time: max of compute and memory terms."""
     return max(flops / PEAK_FLOPS_BF16, bytes_hbm / HBM_BW)
+
+
+def finish_check(records: list, failures: list, *, bench: str,
+                 out: str | None, check: bool):
+    """Uniform benchmark epilogue shared by every gated main.
+
+    Appends a `policy: "check"` record carrying the gate verdict, writes
+    the `--out` JSON artifact BEFORE exiting — so CI gets the measurements
+    and the exact failure strings even when the gate fails (the workflow
+    uploads artifacts with `if: always()`) — then applies the `--check`
+    exit-code contract. Gate conditions are evaluated by the caller;
+    `failures` is its (possibly empty) list of human-readable reasons.
+    """
+    import json
+    import sys
+
+    rec = {"bench": bench, "policy": "check", "checked": bool(check),
+           "ok": not failures, "failures": list(failures)}
+    records.append(rec)
+    print("BENCH " + json.dumps(rec))
+    if out:
+        with open(out, "w") as f:
+            json.dump(records, f, indent=1)
+    if check and failures:
+        print("CHECK FAILED: " + "; ".join(failures))
+        sys.exit(1)
+    if check:
+        print("CHECK OK")

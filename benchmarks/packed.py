@@ -41,7 +41,7 @@ import numpy as np
 if __package__ in (None, ""):   # `python benchmarks/packed.py` support
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import time_fn
+from benchmarks.common import finish_check, time_fn
 from repro.configs.simgnn_aids import CONFIG as CFG
 from repro.core.batching import bucket_pairs, pack_pairs, unpack_pair_scores
 from repro.core.simgnn import init_simgnn_params, pair_score
@@ -153,23 +153,16 @@ def main():
     else:
         records, summary = run(batch=a.batch, node_budget=a.node_budget,
                                iters=a.iters)
-    if a.out:
-        with open(a.out, "w") as f:
-            json.dump(records, f, indent=1)
-    if a.check:
-        failures = []
-        if summary["worst_kernel_parity"] > PARITY_BOUND:
-            failures.append(f"kernel-vs-reference parity "
-                            f"{summary['worst_kernel_parity']:.2e} > "
-                            f"{PARITY_BOUND:.0e}")
-        if summary["packed_speedup_vs_bucketed_mega"] < 1.0:
-            failures.append(
-                "packed slower than bucketed megakernel "
-                f"({summary['packed_speedup_vs_bucketed_mega']}x)")
-        if failures:
-            print("CHECK FAILED: " + "; ".join(failures))
-            sys.exit(1)
-        print("CHECK OK")
+    failures = []
+    if summary["worst_kernel_parity"] > PARITY_BOUND:
+        failures.append(f"kernel-vs-reference parity "
+                        f"{summary['worst_kernel_parity']:.2e} > "
+                        f"{PARITY_BOUND:.0e}")
+    if summary["packed_speedup_vs_bucketed_mega"] < 1.0:
+        failures.append(
+            "packed slower than bucketed megakernel "
+            f"({summary['packed_speedup_vs_bucketed_mega']}x)")
+    finish_check(records, failures, bench="packed", out=a.out, check=a.check)
 
 
 if __name__ == "__main__":

@@ -40,7 +40,7 @@ import numpy as np
 if __package__ in (None, ""):   # `python benchmarks/sparse.py` support
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import time_fn
+from benchmarks.common import finish_check, time_fn
 from repro.configs.simgnn_aids import CONFIG as CFG
 from repro.core.batching import bucket_pairs, pack_pairs, unpack_pair_scores
 from repro.core.engine import ScoringEngine
@@ -193,25 +193,18 @@ def main():
     else:
         records, summary = run(batch=a.batch, node_budget=a.node_budget,
                                iters=a.iters, avg_degree=a.avg_degree)
-    if a.out:
-        with open(a.out, "w") as f:
-            json.dump(records, f, indent=1)
-    if a.check:
-        failures = []
-        if summary["sparse_parity"] > PARITY_BOUND:
-            failures.append(f"sparse-vs-reference parity "
-                            f"{summary['sparse_parity']:.2e} > "
-                            f"{PARITY_BOUND:.0e}")
-        if (summary["measured_avg_degree"] <= 4.0
-                and summary["sparse_speedup_vs_packed_dense"] < 1.0):
-            failures.append(
-                "sparse slower than packed-dense on a sparse stream "
-                f"({summary['sparse_speedup_vs_packed_dense']}x at degree "
-                f"{summary['measured_avg_degree']})")
-        if failures:
-            print("CHECK FAILED: " + "; ".join(failures))
-            sys.exit(1)
-        print("CHECK OK")
+    failures = []
+    if summary["sparse_parity"] > PARITY_BOUND:
+        failures.append(f"sparse-vs-reference parity "
+                        f"{summary['sparse_parity']:.2e} > "
+                        f"{PARITY_BOUND:.0e}")
+    if (summary["measured_avg_degree"] <= 4.0
+            and summary["sparse_speedup_vs_packed_dense"] < 1.0):
+        failures.append(
+            "sparse slower than packed-dense on a sparse stream "
+            f"({summary['sparse_speedup_vs_packed_dense']}x at degree "
+            f"{summary['measured_avg_degree']})")
+    finish_check(records, failures, bench="sparse", out=a.out, check=a.check)
 
 
 if __name__ == "__main__":

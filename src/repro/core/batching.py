@@ -417,6 +417,17 @@ def next_pow2(n: int, floor: int = 8) -> int:
 _GROW_WARNED: set[tuple[int, int]] = set()
 
 
+def reset_grow_warnings() -> None:
+    """Clear the warn-once registry so the next budget growth warns again.
+
+    The registry is process-global (one warning per distinct growth per
+    process), which is right for servers but wrong for test isolation and
+    for long-lived processes that deliberately re-tune budgets — both were
+    reaching in and mutating `_GROW_WARNED` directly. This is the supported
+    hook."""
+    _GROW_WARNED.clear()
+
+
 def to_edge_batch(batch: GraphBatch, max_edges: int) -> EdgeBatch:
     """Extract the normalized-adjacency non-zeros as a padded edge list.
 

@@ -42,19 +42,33 @@ All compiled-callable caches (one per size bucket, `bucket_fns`) and packing
 statistics (`last_pack_stats`) live on the engine instance, so a serving
 process holds exactly one engine per model and every executable is reused
 across calls (the paper's 'customize per workload' principle, Table 2).
+
+Since DESIGN.md §12 the same ladder doubles as the fault-tolerance chain:
+inputs are quarantined before planning (`core/validate.py` — invalid pairs
+score NaN instead of poisoning the batch), a failing or NaN-producing
+executor steps the call down the degradation ladder
+(packed_sparse -> packed_dense -> bucketed_mega -> reference), and a
+per-(path, shape-class) circuit breaker (`core/health.py`) stops retrying a
+persistently broken path during a cool-down. `ScorePlan` records
+`quarantined`/`degraded_from`/`attempts`; `health()` reports breaker states
+and error counters. `repro.testing.faults` drives all of it
+deterministically through the `_FAULT_HOOK` seam below.
 """
 
 from __future__ import annotations
 
 import functools
-from collections import OrderedDict
-from dataclasses import dataclass, field
+import time
+from collections import Counter, OrderedDict
+from dataclasses import dataclass, field, replace
 from typing import Callable, Sequence
 
 import jax
 import numpy as np
 
 from repro.core.cache import EmbeddingCache, graph_key
+from repro.core.health import CircuitBreaker
+from repro.core.validate import GraphValidationError, validate_pairs
 
 PATHS = ("reference", "two_kernel", "bucketed_mega", "packed_dense",
          "packed_sparse", "embedding_cache")
@@ -64,6 +78,58 @@ PACKED_PATHS = ("packed_dense", "packed_sparse")
 #: The bucketed paths run inside pallas_call (no autodiff rule) and the
 #: embedding cache serves stale non-differentiable activations.
 TRAIN_PATHS = ("reference", "packed_dense", "packed_sparse")
+
+#: Graceful-degradation ladder (DESIGN.md §12): when a path's executor
+#: fails (raises, exhausts resources, or emits non-finite scores on
+#: validated inputs) the call steps down to the next rung — specialized
+#: paths degrade toward the dense jnp reference, which is the terminal
+#: rung and never degrades further. This is SPA-GCN's flexibility argument
+#: turned into a fault-tolerance chain: every rung computes the same
+#: scores, only the execution strategy changes.
+DEGRADE_LADDER = {
+    "packed_sparse": ("packed_dense", "bucketed_mega", "reference"),
+    "packed_dense": ("bucketed_mega", "reference"),
+    "bucketed_mega": ("reference",),
+    "two_kernel": ("bucketed_mega", "reference"),
+    "embedding_cache": ("bucketed_mega", "reference"),
+    "reference": (),
+}
+#: Training ladder: restricted to the VJP-capable executors (§11).
+TRAIN_DEGRADE_LADDER = {
+    "packed_sparse": ("packed_dense", "reference"),
+    "packed_dense": ("reference",),
+    "reference": (),
+}
+
+#: Fault-injection seam (DESIGN.md §12): `repro.testing.faults.inject()`
+#: arms this with a hook; production leaves it None (one attribute read per
+#: executor call). The engine routes EVERY kernel/executor invocation
+#: through `_call` so injected faults hit warm engines too — their jitted
+#: callables are cached on the instance, out of monkeypatching's reach.
+_FAULT_HOOK: Callable | None = None
+
+
+def _call(site: str, thunk: Callable):
+    hook = _FAULT_HOOK
+    return hook(site, thunk) if hook is not None else thunk()
+
+
+class NonFiniteOutput(RuntimeError):
+    """An executor produced NaN/Inf scores (or grads) for inputs that
+    passed validation — treated exactly like a crash by the degradation
+    ladder: silently-corrupting kernels must not outrank loud ones."""
+
+
+def tree_all_finite(*trees) -> bool:
+    """True iff every floating leaf of the given pytrees is finite —
+    the one-line guard `train.step` uses to skip poisoned update steps
+    (DESIGN.md §12) without naming any dispatch path."""
+    for leaf in jax.tree.leaves(trees):
+        arr = np.asarray(leaf)
+        if (np.issubdtype(arr.dtype, np.floating)
+                and not np.isfinite(arr).all()):
+            return False
+    return True
 
 
 def _empty_idx() -> np.ndarray:
@@ -94,11 +160,20 @@ class ScorePlan:
 
     On the embedding-cached path the plan additionally carries the hit/miss
     split (DESIGN.md §10): `graph_keys` holds the canonical key of every
-    graph in the call (all lhs graphs, then all rhs graphs), `cached_idx`
-    the positions whose embedding is already resident, and `to_embed_idx`
-    the positions that will actually be embedded — the *first* occurrence
-    of each uncached key, so `len(to_embed_idx)` is the number of GCN+Att
-    runs a `score()` will pay (later duplicates ride along for free).
+    graph the plan covers (all lhs graphs, then all rhs graphs, quarantined
+    pairs excluded), `cached_idx` the positions whose embedding is already
+    resident, and `to_embed_idx` the positions that will actually be
+    embedded — the *first* occurrence of each uncached key, so
+    `len(to_embed_idx)` is the number of GCN+Att runs a `score()` will pay
+    (later duplicates ride along for free).
+
+    Fault-tolerance fields (DESIGN.md §12): `quarantined` holds the
+    structured `InvalidGraph` records of inputs rejected by validation
+    (lenient mode — those pairs score NaN and appear in neither `fit_idx`
+    nor `over_idx`). After execution, the engine republishes the plan on
+    `last_plan` with `degraded_from` (the rungs that failed or were
+    breaker-rejected, in order) and `attempts` (executor invocations
+    actually tried — 1 per work item on a healthy call).
     """
     path: str
     fallback: str
@@ -109,6 +184,9 @@ class ScorePlan:
     cached_idx: np.ndarray = field(default_factory=_empty_idx)
     to_embed_idx: np.ndarray = field(default_factory=_empty_idx)
     graph_keys: tuple = ()
+    quarantined: tuple = ()
+    degraded_from: tuple = ()
+    attempts: int = 1
 
 
 class ScoringEngine:
@@ -145,10 +223,18 @@ class ScoringEngine:
                  node_budget: int | None = None,
                  edge_budget: int | None = None,
                  cache_size: int = 4096,
-                 embed_with_kernels: bool = False):
+                 embed_with_kernels: bool = False,
+                 validation: str = "lenient",
+                 degrade: bool = True,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
         if path != "auto" and path not in PATHS:
             raise ValueError(f"unknown path {path!r}; expected 'auto' or one "
                              f"of {PATHS}")
+        if validation not in ("strict", "lenient", "off"):
+            raise ValueError(f"unknown validation mode {validation!r}; "
+                             "expected 'strict', 'lenient' or 'off'")
         from repro.kernels.ops import packed_node_budget
 
         self.params = params
@@ -183,6 +269,28 @@ class ScoringEngine:
         #: subsequent batch re-derive (and re-compile) a different [T, E_ov]
         #: shape (the `to_edge_batch` realized-budget reuse, PR 5 satellite).
         self._overflow_floor: int = 8
+        # ---- fault tolerance (DESIGN.md §12) ----
+        #: "strict" raises GraphValidationError on any invalid input,
+        #: "lenient" (default) quarantines per pair (NaN score), "off"
+        #: skips validation (trusted in-process generators, benchmarks).
+        self.validation = validation
+        #: False pins every call to its planned path — failures propagate
+        #: (debugging / parity harnesses); True (default) walks the ladder.
+        self.degrade = degrade
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown_s = breaker_cooldown_s
+        self._clock = clock
+        #: per-(path, shape-class) circuit breakers, created lazily.
+        self.breakers: dict[tuple, CircuitBreaker] = {}
+        #: error/degradation/quarantine counters reported by `health()`.
+        self.counters: Counter = Counter()
+        #: bucketed callables for non-default flavors — only populated when
+        #: degradation crosses flavors (e.g. bucketed_mega -> reference on a
+        #: kernel-flavored engine). `bucket_fns` keeps its public int-keyed
+        #: contract for the engine's own flavor.
+        self._alt_bucket_fns: dict[tuple, Callable] = {}
+        self._embed_fallback_fn: Callable | None = None
+        self._head_fallback_fn: Callable | None = None
 
     # ------------------------------------------------------------- planning
 
@@ -281,12 +389,29 @@ class ScoringEngine:
         (its embeddings carry no gradients), the small-batch / label-free
         degrades land on the dense reference instead of the bucketed
         megakernel, and the oversize fallback is the reference executor.
+
+        Validation runs FIRST (DESIGN.md §12): invalid pairs are
+        quarantined before any stats/packing code touches them (a malformed
+        adjacency must fail as a structured record, not a shape error deep
+        inside the planner). Quarantined pairs appear only in
+        `plan.quarantined`; `fit_idx`/`over_idx` index the original batch
+        but cover valid pairs only. Strict mode raises instead.
         """
+        n = len(pairs)
+        quarantined: tuple = ()
+        valid_idx = np.arange(n, dtype=np.int64)
+        if self.validation != "off" and n:
+            valid_idx, quarantined = validate_pairs(
+                pairs, n_labels=self.cfg.n_node_labels)
+            if quarantined and self.validation == "strict":
+                raise GraphValidationError(quarantined)
+        valid = (pairs if len(valid_idx) == n
+                 else [pairs[i] for i in valid_idx])
         # Density only steers the auto sparse/dense split and the sparse
         # edge budget; forced paths that ignore it skip the O(sum n_i^2)
         # adjacency scan.
         stats = self.workload_stats(
-            pairs, measure_density=self.path in ("auto", "packed_sparse"))
+            valid, measure_density=self.path in ("auto", "packed_sparse"))
         # The cache steers dispatch only when it could hold answers: keys
         # are hashed (O(sum n_i), host-side) iff the path is forced to the
         # cached one, or auto sees a non-empty cache — a cold cache costs
@@ -294,11 +419,11 @@ class ScoringEngine:
         # reads the cache.
         keys: tuple = ()
         hit_frac = 0.0
-        if not train and len(pairs) and stats.has_labels \
+        if not train and len(valid) and stats.has_labels \
                 and self.cache.capacity > 0 and (
                 self.path == "embedding_cache"
                 or (self.path == "auto" and len(self.cache))):
-            keys = self._graph_keys(pairs)
+            keys = self._graph_keys(valid)
             unique = set(keys)
             hit_frac = (sum(1 for k in unique if k in self.cache)
                         / len(unique))
@@ -312,52 +437,67 @@ class ScoringEngine:
                 sorted(i for k, i in first.items() if not hit[i]), np.int64)
         if path in PACKED_PATHS:
             fits = np.asarray([max(g1["adj"].shape[0], g2["adj"].shape[0])
-                               <= self.node_budget for g1, g2 in pairs], bool)
-            fit_idx = np.flatnonzero(fits)
-            over_idx = np.flatnonzero(~fits)
+                               <= self.node_budget for g1, g2 in valid], bool)
+            fit_idx = valid_idx[np.flatnonzero(fits)]
+            over_idx = valid_idx[np.flatnonzero(~fits)]
         elif path == "embedding_cache":
             # The embed stage buckets internally with power-of-two overflow,
             # so nothing is oversized for this path.
-            fit_idx = np.arange(len(pairs))
+            fit_idx = valid_idx
             over_idx = np.empty(0, np.int64)
         else:
             fit_idx = np.empty(0, np.int64)
-            over_idx = np.arange(len(pairs))
+            over_idx = valid_idx
         fallback = "reference" if train else self._bucket_flavor
         return ScorePlan(path=path, fallback=fallback,
                          fit_idx=fit_idx, over_idx=over_idx, stats=stats,
                          reason=reason, cached_idx=cached_idx,
-                         to_embed_idx=to_embed_idx, graph_keys=keys)
+                         to_embed_idx=to_embed_idx, graph_keys=keys,
+                         quarantined=quarantined)
 
     # ------------------------------------------------------------ execution
 
-    def _bucket_fn(self, bucket: int) -> Callable:
+    def _bucket_fn(self, bucket: int, flavor: str | None = None) -> Callable:
         """One cached callable per size bucket (built lazily, reused across
-        calls; XLA caches one executable per padded batch shape inside)."""
-        if bucket not in self.bucket_fns:
-            from repro.core.simgnn import pair_score
-            from repro.kernels import ops
+        calls; XLA caches one executable per padded batch shape inside).
 
-            if self._bucket_flavor == "reference":
+        `flavor` overrides the engine's own bucketed flavor — used by the
+        degradation ladder (e.g. a kernel-flavored engine stepping down to
+        the jnp reference). The engine-flavor cache keeps its public
+        int-keyed `bucket_fns` contract; other flavors live in a side cache.
+        """
+        from repro.core.simgnn import pair_score
+        from repro.kernels import ops
+
+        if flavor is None or flavor == self._bucket_flavor:
+            flavor = self._bucket_flavor
+            cache, key = self.bucket_fns, bucket
+        else:
+            cache, key = self._alt_bucket_fns, (flavor, bucket)
+        if key not in cache:
+            if flavor == "reference":
                 if self._ref_fn is None:    # shared: jit caches per shape
                     self._ref_fn = jax.jit(pair_score)
-                self.bucket_fns[bucket] = self._ref_fn
-            elif self._bucket_flavor == "two_kernel":
-                self.bucket_fns[bucket] = ops.simgnn_pair_score_kernel
+                cache[key] = self._ref_fn
+            elif flavor == "two_kernel":
+                cache[key] = ops.simgnn_pair_score_kernel
             else:
-                self.bucket_fns[bucket] = jax.jit(functools.partial(
+                cache[key] = jax.jit(functools.partial(
                     ops.pair_score_megakernel,
                     block_pairs=ops.megakernel_block_pairs(bucket)))
-        return self.bucket_fns[bucket]
+        return cache[key]
 
-    def _score_bucketed(self, pairs, idx: np.ndarray, out: np.ndarray):
+    def _score_bucketed(self, pairs, idx: np.ndarray, out: np.ndarray,
+                        flavor: str | None = None):
         from repro.core.batching import bucket_pairs
 
+        site = flavor or self._bucket_flavor
         for bucket, (lhs, rhs, idxs) in bucket_pairs(
                 pairs, self.cfg.n_node_labels, allow_oversize=True).items():
-            s = self._bucket_fn(bucket)(
+            fn = self._bucket_fn(bucket, flavor)
+            s = _call(site, lambda fn=fn, lhs=lhs, rhs=rhs: fn(
                 self.params, lhs.adj, lhs.feats, lhs.mask,
-                rhs.adj, rhs.feats, rhs.mask)
+                rhs.adj, rhs.feats, rhs.mask))
             out[idx[idxs]] = np.asarray(s)
 
     def _score_packed(self, pairs, idx: np.ndarray, out: np.ndarray,
@@ -372,13 +512,15 @@ class ScoringEngine:
         if sparse:
             packed, pstats = self._pack_sparse(pairs, slots,
                                                stats.avg_degree)
-            s = ops.pair_score_sparse(self.params, packed,
-                                      quantize_tiles=True)
+            s = _call("packed_sparse",
+                      lambda: ops.pair_score_sparse(self.params, packed,
+                                                    quantize_tiles=True))
         else:
             packed, pstats = pack_pairs(pairs, self.node_budget,
                                         slots_per_tile=slots)
-            s = ops.pair_score_packed(self.params, packed,
-                                      quantize_tiles=True)
+            s = _call("packed_dense",
+                      lambda: ops.pair_score_packed(self.params, packed,
+                                                    quantize_tiles=True))
         self.last_pack_stats = pstats
         out[idx] = unpack_pair_scores(s, packed, len(pairs))
 
@@ -400,6 +542,98 @@ class ScoringEngine:
         self._overflow_floor = max(self._overflow_floor,
                                    pstats["overflow_budget"])
         return packed, pstats
+
+    # ------------------------------------- degradation + breakers (§12)
+
+    def _shape_class(self, stats: WorkloadStats) -> tuple:
+        """Power-of-two (batch, nodes) bucket a breaker is keyed on: a path
+        that dies on 128-node overflow traffic keeps serving 64-node calls
+        normally, and the key space stays O(log^2) like the executable set."""
+        from repro.core.batching import next_pow2
+
+        return (next_pow2(max(stats.n_pairs, 1), floor=1),
+                next_pow2(max(stats.max_nodes, 1), floor=8))
+
+    def _breaker(self, path: str, shape_class: tuple) -> CircuitBreaker:
+        key = (path, shape_class)
+        br = self.breakers.get(key)
+        if br is None:
+            br = self.breakers[key] = CircuitBreaker(
+                failure_threshold=self.breaker_threshold,
+                cooldown_s=self.breaker_cooldown_s, clock=self._clock)
+        return br
+
+    def _execute_rung(self, rung: str, sub, idx: np.ndarray,
+                      out: np.ndarray, plan: ScorePlan):
+        if rung in PACKED_PATHS:
+            self._score_packed(sub, idx, out, rung == "packed_sparse",
+                               plan.stats)
+        elif rung == "embedding_cache":
+            self._score_cached(sub, idx, out, plan)
+        else:
+            self._score_bucketed(sub, idx, out, flavor=rung)
+
+    def _run_score_ladder(self, start: str, sub, idx: np.ndarray,
+                          out: np.ndarray, plan: ScorePlan
+                          ) -> tuple[int, list]:
+        """Execute one work item (a pair subset) starting at `start`,
+        stepping down `DEGRADE_LADDER` on failure (DESIGN.md §12).
+
+        A rung fails by raising OR by producing non-finite scores for
+        validated inputs (a silently-corrupting kernel). Each non-reference
+        rung is guarded by its (path, shape-class) breaker: while open, the
+        rung is skipped outright and the next rung serves (the cool-down);
+        once half-open, one probe runs. The terminal reference rung has no
+        breaker and no finite check — by then NaN means the *model* is
+        non-finite, which quarantine cannot rule out and retries cannot fix.
+        Returns (attempts, degraded-rung names); re-raises only if every
+        rung failed.
+        """
+        rungs = (start,) + (DEGRADE_LADDER.get(start, ())
+                            if self.degrade else ())
+        sc = self._shape_class(plan.stats)
+        degraded: list[str] = []
+        attempts = 0
+        last_err: Exception | None = None
+        for rung in rungs:
+            terminal = rung == "reference"
+            br = None if terminal else self._breaker(rung, sc)
+            if br is not None and not br.allow():
+                self.counters[f"breaker_rejected:{rung}"] += 1
+                degraded.append(rung)
+                continue
+            attempts += 1
+            try:
+                self._execute_rung(rung, sub, idx, out, plan)
+                if not terminal and not np.isfinite(out[idx]).all():
+                    raise NonFiniteOutput(
+                        f"{rung} produced non-finite scores for validated "
+                        "inputs")
+                if br is not None:
+                    br.record_success()
+                return attempts, degraded
+            except Exception as exc:
+                if br is not None:
+                    br.record_failure()
+                self.counters[f"errors:{rung}"] += 1
+                degraded.append(rung)
+                last_err = exc
+                if rung in PACKED_PATHS:
+                    self.last_pack_stats = None   # stats of a failed attempt
+        raise last_err if last_err is not None else RuntimeError(
+            f"no executable rung for {start} (ladder exhausted)")
+
+    def health(self) -> dict:
+        """Inspectable fault-tolerance state (DESIGN.md §12): breaker
+        snapshots keyed by path and shape class, error/degradation/
+        quarantine counters, and the embedding-LRU counters."""
+        return {
+            "breakers": {
+                f"{path}[pairs<={b},nodes<={n}]": br.snapshot()
+                for (path, (b, n)), br in sorted(self.breakers.items())},
+            "counters": dict(self.counters),
+            "cache": self.cache.stats(),
+        }
 
     # -------------------------------------------------------- training path
 
@@ -461,17 +695,20 @@ class ScoringEngine:
         return self._train_fns[key]
 
     def _packed_sse(self, params, fit_pairs, fit_targets: np.ndarray,
-                    plan: ScorePlan, accum_steps: int):
+                    plan: ScorePlan, accum_steps: int,
+                    path: str | None = None):
         """Sum-of-squared-errors + grads of the packed fit split: pack ONCE,
         scatter targets to [T, P] pair slots, pad the tile axis to a chunk
         multiple (pad tiles are all-zero: exact-zero scores, targets and
-        grads), run the chunk-scanning custom-VJP executor."""
+        grads), run the chunk-scanning custom-VJP executor. `path` defaults
+        to the planned path; the train ladder passes the current rung."""
         import jax.numpy as jnp
 
         from repro.core.batching import next_pow2, pack_pairs
         from repro.kernels import grad as kgrad
 
-        sparse = plan.path == "packed_sparse"
+        path = plan.path if path is None else path
+        sparse = path == "packed_sparse"
         slots = max(8, self.node_budget // 4)
         if sparse:
             packed, pstats = self._pack_sparse(fit_pairs, slots,
@@ -505,8 +742,10 @@ class ScoringEngine:
 
         arrays = tuple(pad_tiles(x)
                        for x in kgrad.packed_arrays(packed, sparse=sparse))
-        fn = self._train_fn(plan.path, chunk_tiles)
-        return fn(params, pad_tiles(jnp.asarray(tgt)), *arrays)
+        fn = self._train_fn(path, chunk_tiles)
+        return _call(f"train:{path}",
+                     lambda: fn(params, pad_tiles(jnp.asarray(tgt)),
+                                *arrays))
 
     def _reference_sse(self, params, pairs, targets: np.ndarray):
         """SSE + grads of the dense-reference executor (the train-mode
@@ -522,12 +761,64 @@ class ScoringEngine:
                              params)
         for _, (lhs, rhs, idxs) in bucket_pairs(
                 pairs, self.cfg.n_node_labels, allow_oversize=True).items():
-            s, g = fn(params, jnp.asarray(targets[idxs]),
-                      lhs.adj, lhs.labels, lhs.mask,
-                      rhs.adj, rhs.labels, rhs.mask)
+            s, g = _call("train:reference",
+                         lambda lhs=lhs, rhs=rhs, idxs=idxs: fn(
+                             params, jnp.asarray(targets[idxs]),
+                             lhs.adj, lhs.labels, lhs.mask,
+                             rhs.adj, rhs.labels, rhs.mask))
             sse = sse + s
             grads = jax.tree.map(jnp.add, grads, g)
         return sse, grads
+
+    def _run_train_ladder(self, start: str, params, sub,
+                          tgt: np.ndarray, plan: ScorePlan,
+                          accum_steps: int) -> tuple:
+        """Training twin of `_run_score_ladder`: walk the VJP-capable
+        `TRAIN_DEGRADE_LADDER`, breaker-gated per (train:path, shape-class)
+        — train breakers are separate from score breakers because the
+        executors are (custom-VJP twins vs. pallas kernels). Non-terminal
+        rungs that emit non-finite loss/grads for finite targets fail like
+        crashes; the reference rung serves whatever it computes (a NaN
+        there is the model's, and `train.step` skips the update).
+        Returns (sse, grads, attempts, degraded)."""
+        rungs = (start,) + (TRAIN_DEGRADE_LADDER.get(start, ())
+                            if self.degrade else ())
+        sc = self._shape_class(plan.stats)
+        degraded: list[str] = []
+        attempts = 0
+        last_err: Exception | None = None
+        for rung in rungs:
+            terminal = rung == "reference"
+            br = (None if terminal
+                  else self._breaker(f"train:{rung}", sc))
+            if br is not None and not br.allow():
+                self.counters[f"breaker_rejected:train:{rung}"] += 1
+                degraded.append(rung)
+                continue
+            attempts += 1
+            try:
+                if rung in PACKED_PATHS:
+                    s, g = self._packed_sse(params, sub, tgt, plan,
+                                            accum_steps, path=rung)
+                else:
+                    s, g = self._reference_sse(params, sub, tgt)
+                if not terminal and not tree_all_finite(s, g):
+                    raise NonFiniteOutput(
+                        f"train:{rung} produced non-finite loss/grads for "
+                        "finite targets")
+                if br is not None:
+                    br.record_success()
+                return s, g, attempts, degraded
+            except Exception as exc:
+                if br is not None:
+                    br.record_failure()
+                self.counters[f"errors:train:{rung}"] += 1
+                degraded.append(rung)
+                last_err = exc
+                if rung in PACKED_PATHS:
+                    self.last_pack_stats = None
+        raise last_err if last_err is not None else RuntimeError(
+            f"no executable train rung for {start} (ladder exhausted)")
 
     def loss_and_grad(self, pairs: Sequence[tuple], targets, *,
                       params=None, accum_steps: int = 1):
@@ -542,9 +833,16 @@ class ScoringEngine:
         (a power of two) guarantees at least that many chunks — gradient
         accumulation without re-packing, since only the scan slice moves.
 
+        Fault tolerance (DESIGN.md §12): non-finite targets are dropped
+        before planning (a poisoned label would NaN the whole SSE), invalid
+        graphs are quarantined by `plan()`, and each work item walks
+        `TRAIN_DEGRADE_LADDER` on executor failure. The loss is normalized
+        by the number of pairs actually scored, so dropped/quarantined
+        pairs do not deflate the gradient signal.
+
         `params` defaults to the engine's own (serving) params; a training
         loop passes its evolving copy. Returns `(loss, grads)` with
-        loss = mean_i (pred_i - target_i)^2 over the whole batch and grads
+        loss = mean_i (pred_i - target_i)^2 over the scored pairs and grads
         a pytree like `params` (fp32 accumulation).
         """
         import jax.numpy as jnp
@@ -553,9 +851,21 @@ class ScoringEngine:
             raise ValueError(f"accum_steps must be a power of two, got "
                              f"{accum_steps}")
         params = self.params if params is None else params
+        targets = np.asarray(targets, np.float32).reshape(-1)
+        if targets.shape[0] != len(pairs):
+            raise ValueError(f"{len(pairs)} pairs but {targets.shape[0]} "
+                             "targets")
+        finite_t = np.isfinite(targets)
+        if not finite_t.all():
+            self.counters["nonfinite_targets"] += int((~finite_t).sum())
+            keep = np.flatnonzero(finite_t)
+            pairs = [pairs[i] for i in keep]
+            targets = targets[keep]
         plan = self.plan(pairs, train=True)
         self.last_plan = plan
         self.last_pack_stats = None
+        if plan.quarantined:
+            self.counters["quarantined_graphs"] += len(plan.quarantined)
         zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
         if not len(pairs):
             return jnp.zeros((), jnp.float32), zero
@@ -563,24 +873,28 @@ class ScoringEngine:
             raise ValueError(
                 "graphs must carry int node labels ('labels'); a dense-"
                 "feats executor is not implemented yet (ROADMAP open item)")
-        targets = np.asarray(targets, np.float32).reshape(-1)
-        if targets.shape[0] != len(pairs):
-            raise ValueError(f"{len(pairs)} pairs but {targets.shape[0]} "
-                             "targets")
         sse = jnp.zeros((), jnp.float32)
         grads = zero
-        if len(plan.fit_idx):
-            s, g = self._packed_sse(params, [pairs[i] for i in plan.fit_idx],
-                                    targets[plan.fit_idx], plan, accum_steps)
+        degraded: list[str] = []
+        attempts = 0
+        n_live = 0
+        for start, idx in ((plan.path, plan.fit_idx),
+                           ("reference", plan.over_idx)):
+            if not len(idx):
+                continue
+            s, g, a, d = self._run_train_ladder(
+                start, params, [pairs[i] for i in idx], targets[idx],
+                plan, accum_steps)
             sse = sse + s
             grads = jax.tree.map(jnp.add, grads, g)
-        if len(plan.over_idx):
-            s, g = self._reference_sse(params,
-                                       [pairs[i] for i in plan.over_idx],
-                                       targets[plan.over_idx])
-            sse = sse + s
-            grads = jax.tree.map(jnp.add, grads, g)
-        n = float(len(pairs))
+            attempts += a
+            degraded.extend(d)
+            n_live += len(idx)
+        self.last_plan = replace(plan, degraded_from=tuple(degraded),
+                                 attempts=max(attempts, 1))
+        if not n_live:
+            return jnp.zeros((), jnp.float32), zero
+        n = float(n_live)
         return sse / n, jax.tree.map(lambda x: x / n, grads)
 
     # ------------------------------------------------- embedding-cached path
@@ -647,8 +961,33 @@ class ScoringEngine:
         for b, items in sorted(buckets.items()):
             batch = pad_graphs([g for _, g in items],
                                self.cfg.n_node_labels, b)
-            hg = np.asarray(embed(self.params, batch.adj, batch.feats,
-                                  batch.mask), np.float32)
+
+            def run(site, fn):
+                h = np.asarray(_call(site, lambda: fn(
+                    self.params, batch.adj, batch.feats, batch.mask)),
+                    np.float32)
+                if not np.isfinite(h).all():
+                    raise NonFiniteOutput(
+                        f"{site} produced non-finite embeddings")
+                return h
+
+            # Per-bucket degradation (DESIGN.md §12): a failing embed batch
+            # retries once on the pure-jnp reference embedder; if that also
+            # fails, ONLY this bucket's graphs are dropped (NaN rows, never
+            # cached) — the other buckets and every cache hit still serve.
+            try:
+                hg = run("embed", embed)
+            except Exception:
+                self.counters["errors:embed"] += 1
+                try:
+                    hg = run("embed_fallback", self._embed_fallback())
+                    self.counters["embed_fallbacks"] += 1
+                except Exception:
+                    self.counters["errors:embed_fallback"] += 1
+                    self.counters["embed_dropped_graphs"] += len(items)
+                    for k, _ in items:
+                        out[misses[k]] = np.nan
+                    continue
             for (k, _), emb in zip(items, hg):
                 emb = emb.copy()
                 emb.setflags(write=False)
@@ -656,19 +995,18 @@ class ScoringEngine:
                 out[misses[k]] = emb
         return out
 
-    def pair_scores_from_embeddings(self, hg1, hg2) -> np.ndarray:
-        """Batched NTN+FCN head on precomputed `[B, F]` graph embeddings —
-        the entire per-query cost of a warm 1-vs-N search (DESIGN.md §10).
-        Runs the fused head kernel (`kernels/simgnn_head.py`) except on
-        forced-reference engines, which stay kernel-free."""
-        import jax.numpy as jnp
+    def _embed_fallback(self) -> Callable:
+        """Pure-jnp reference embedder used as the per-bucket retry when the
+        configured embed executor fails — always available, kernel-free."""
+        if self._embed_fallback_fn is None:
+            from repro.core.simgnn import graph_embedding
+            self._embed_fallback_fn = jax.jit(graph_embedding)
+        return self._embed_fallback_fn
 
+    def _head(self) -> Callable:
         if self._head_fn is None:
             if self._bucket_flavor == "reference":
-                from repro.core.simgnn import fcn_head, ntn_scores
-
-                self._head_fn = jax.jit(lambda params, h1, h2: fcn_head(
-                    params["fcn"], ntn_scores(params["ntn"], h1, h2)))
+                self._head_fn = self._head_fallback()
             else:
                 from repro.kernels import ops
 
@@ -677,45 +1015,99 @@ class ScoringEngine:
                     return ops.pair_scores_fused(params, h1, h2,
                                                  block_pairs=bp)
                 self._head_fn = head
-        hg1 = jnp.asarray(np.asarray(hg1, np.float32))
-        hg2 = jnp.asarray(np.asarray(hg2, np.float32))
-        return np.asarray(self._head_fn(self.params, hg1, hg2), np.float32)
+        return self._head_fn
 
-    def _score_cached(self, pairs, out: np.ndarray, plan: ScorePlan):
+    def _head_fallback(self) -> Callable:
+        if self._head_fallback_fn is None:
+            from repro.core.simgnn import fcn_head, ntn_scores
+
+            self._head_fallback_fn = jax.jit(
+                lambda params, h1, h2: fcn_head(
+                    params["fcn"], ntn_scores(params["ntn"], h1, h2)))
+        return self._head_fallback_fn
+
+    def pair_scores_from_embeddings(self, hg1, hg2) -> np.ndarray:
+        """Batched NTN+FCN head on precomputed `[B, F]` graph embeddings —
+        the entire per-query cost of a warm 1-vs-N search (DESIGN.md §10).
+        Runs the fused head kernel (`kernels/simgnn_head.py`) except on
+        forced-reference engines, which stay kernel-free. A failing or
+        NaN-emitting head retries once on the jnp reference head; pairs
+        whose *embeddings* are already NaN (dropped embed buckets) score
+        NaN without tripping the retry."""
+        import jax.numpy as jnp
+
+        hg1 = np.asarray(hg1, np.float32)
+        hg2 = np.asarray(hg2, np.float32)
+        row_ok = (np.isfinite(hg1).all(axis=-1)
+                  & np.isfinite(hg2).all(axis=-1))
+        h1 = jnp.asarray(hg1)
+        h2 = jnp.asarray(hg2)
+
+        def run(site, fn):
+            s = np.asarray(_call(site, lambda: fn(self.params, h1, h2)),
+                           np.float32)
+            if not np.isfinite(s[row_ok]).all():
+                raise NonFiniteOutput(
+                    f"{site} produced non-finite scores for finite "
+                    "embeddings")
+            return s
+
+        try:
+            return run("head", self._head())
+        except Exception:
+            self.counters["errors:head"] += 1
+            return run("head_fallback", self._head_fallback())
+
+    def _score_cached(self, pairs, idx: np.ndarray, out: np.ndarray,
+                      plan: ScorePlan):
         n = len(pairs)
         keys = plan.graph_keys if len(plan.graph_keys) == 2 * n else None
         hg1 = self.embed_graphs([p[0] for p in pairs],
                                 keys=keys[:n] if keys else None)
         hg2 = self.embed_graphs([p[1] for p in pairs],
                                 keys=keys[n:] if keys else None)
-        out[:] = self.pair_scores_from_embeddings(hg1, hg2)
+        out[idx] = self.pair_scores_from_embeddings(hg1, hg2)
 
     def score(self, pairs: Sequence[tuple]) -> np.ndarray:
-        """Score a batch of graph-pair dicts in original order."""
+        """Score a batch of graph-pair dicts in original order.
+
+        Fault tolerance (DESIGN.md §12): quarantined pairs score NaN;
+        each work item (the planned path's fit split, the fallback's
+        oversize split) walks the degradation ladder on executor failure.
+        The executed plan — including `degraded_from` and `attempts` — is
+        republished on `last_plan`.
+        """
         out = np.zeros(len(pairs), np.float32)
         plan = self.plan(pairs)
         self.last_plan = plan
         # Stats describe the *latest* call only: a bucketed call must not
         # leave a previous packed call's occupancy lying around.
         self.last_pack_stats = None
-        if len(pairs) and not plan.stats.has_labels:
-            # Every executor today builds features from int labels
-            # (pad_graphs one-hots, packed kernels gather W1 rows); fail
-            # with the contract instead of a KeyError deep inside padding.
-            raise ValueError(
-                "graphs must carry int node labels ('labels'); a dense-"
-                "feats executor is not implemented yet (ROADMAP open item)")
-        if plan.path == "embedding_cache":
-            if len(pairs):
-                self._score_cached(pairs, out, plan)
-            return out
-        if len(plan.fit_idx):
-            self._score_packed([pairs[i] for i in plan.fit_idx],
-                               plan.fit_idx, out,
-                               plan.path == "packed_sparse", plan.stats)
-        if len(plan.over_idx):
-            self._score_bucketed([pairs[i] for i in plan.over_idx],
-                                 plan.over_idx, out)
+        if plan.quarantined:
+            self.counters["quarantined_graphs"] += len(plan.quarantined)
+            out[sorted({rec.pair for rec in plan.quarantined})] = np.nan
+        if len(plan.fit_idx) or len(plan.over_idx):
+            if not plan.stats.has_labels:
+                # Every executor today builds features from int labels
+                # (pad_graphs one-hots, packed kernels gather W1 rows); fail
+                # with the contract instead of a KeyError deep inside
+                # padding.
+                raise ValueError(
+                    "graphs must carry int node labels ('labels'); a dense-"
+                    "feats executor is not implemented yet (ROADMAP open "
+                    "item)")
+            degraded: list[str] = []
+            attempts = 0
+            for start, idx in ((plan.path, plan.fit_idx),
+                               (plan.fallback, plan.over_idx)):
+                if not len(idx):
+                    continue
+                a, d = self._run_score_ladder(
+                    start, [pairs[i] for i in idx], idx, out, plan)
+                attempts += a
+                degraded.extend(d)
+            self.last_plan = replace(plan, degraded_from=tuple(degraded),
+                                     attempts=max(attempts, 1))
         return out
 
     __call__ = score

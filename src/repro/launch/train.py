@@ -57,7 +57,10 @@ def train_simgnn(args):
     params, opt_state, hist = loop.run(
         step_fn, params, opt_state, batch_fn, n_steps=args.steps,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-        on_metrics=on_metrics)
+        resume=args.resume, on_metrics=on_metrics)
+    if engine.counters.get("train_skipped_steps"):
+        print(f"[train] skipped {engine.counters['train_skipped_steps']} "
+              "non-finite steps")
     print(f"[train] final loss {hist[-1]['loss']:.5f}")
     return hist
 
@@ -96,7 +99,7 @@ def train_lm(args):
     params, opt_state, hist = loop.run(
         step_fn, params, opt_state, batch_fn, n_steps=args.steps,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-        on_metrics=on_metrics)
+        resume=args.resume, on_metrics=on_metrics)
     print(f"[train] final loss {hist[-1]['loss']:.4f}")
     return hist
 
@@ -111,6 +114,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    # "auto" restores the latest complete checkpoint in --ckpt-dir and
+    # replays the deterministic data stream from there (DESIGN.md §6/§12);
+    # "none" always starts from step 0 (fresh run into a reused directory).
+    ap.add_argument("--resume", default="auto", choices=["auto", "none"])
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--mesh", default="none", choices=["none", "single", "multi"])
     ap.add_argument("--compress-grads", action="store_true")

@@ -32,6 +32,9 @@ class SearchStats:
     queries: int = 0
     pairs_scored: int = 0
     index_size: int = 0
+    failed_embeddings: int = 0     # corpus rows that are NaN after indexing
+                                   # (their embed bucket AND its reference
+                                   # retry failed — DESIGN.md §12)
     embed_seconds: float = 0.0     # query-side embedding (+ any corpus misses)
     head_seconds: float = 0.0      # NTN+FCN over the corpus
     topk_seconds: float = 0.0      # host-side partial sort
@@ -40,6 +43,7 @@ class SearchStats:
     def as_dict(self) -> dict:
         return {"queries": self.queries, "pairs_scored": self.pairs_scored,
                 "index_size": self.index_size,
+                "failed_embeddings": self.failed_embeddings,
                 "embed_seconds": round(self.embed_seconds, 6),
                 "head_seconds": round(self.head_seconds, 6),
                 "topk_seconds": round(self.topk_seconds, 6),
@@ -80,6 +84,13 @@ class SimilaritySearchServer:
         self.corpus_emb = self.engine.embed_graphs(self.corpus)
         self.stats.embed_seconds += time.perf_counter() - t0
         self.stats.index_size = len(self.corpus)
+        # Survive a failed corpus shard (DESIGN.md §12): the engine already
+        # retried each failing embed bucket on the reference embedder and
+        # NaN'd only the graphs whose retry ALSO failed — those rows stay in
+        # the index (scores NaN, ranked last by topk) and are counted here
+        # instead of killing the whole index() call.
+        self.stats.failed_embeddings = int(
+            (~np.isfinite(self.corpus_emb).all(axis=-1)).sum())
         self.stats.cache = self.engine.cache.stats()
         return self.corpus_emb
 
@@ -91,8 +102,13 @@ class SimilaritySearchServer:
         scores = self.scores(query)
         t0 = time.perf_counter()
         k = min(k, len(scores))
-        top = np.argpartition(-scores, k - 1)[:k]
-        top = top[np.argsort(-scores[top], kind="stable")]
+        # Rank on a NaN->-inf copy: argpartition on `-scores` would float
+        # NaN entries (failed corpus embeddings) INTO the top-k, silently
+        # displacing real results. Returned scores keep their NaN so a
+        # caller that does see one knows it is a failure, not a similarity.
+        rank = np.where(np.isfinite(scores), scores, -np.inf)
+        top = np.argpartition(-rank, k - 1)[:k]
+        top = top[np.argsort(-rank[top], kind="stable")]
         self.stats.topk_seconds += time.perf_counter() - t0
         return top, scores[top]
 
@@ -116,6 +132,13 @@ class SimilaritySearchServer:
     def search(self, queries: list[dict], k: int = 10) -> list[tuple]:
         """Batched convenience wrapper: [(indices, scores), ...] per query."""
         return [self.topk(q, k) for q in queries]
+
+    def health(self) -> dict:
+        """Engine fault-tolerance state plus the server's own view of the
+        index (DESIGN.md §12) — one call for dashboards/tests."""
+        return {**self.engine.health(),
+                "index_size": self.stats.index_size,
+                "failed_embeddings": self.stats.failed_embeddings}
 
     @property
     def hit_rate(self) -> float:

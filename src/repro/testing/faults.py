@@ -1,0 +1,129 @@
+"""Deterministic fault injection for the scoring engine (DESIGN.md §12).
+
+Every degradation transition in the engine — ladder step-down, breaker
+open/half-open/close, NaN-guarded training, per-bucket embed fallback — is
+only trustworthy if it can be *driven* on demand. This harness does that
+without monkeypatching kernels (whose jitted callables the engine caches,
+so attribute patching would silently miss warm engines): the engine routes
+every executor invocation through a module-level hook seam
+(`core.engine._FAULT_HOOK`, `None` in production — a single attribute read
+per kernel call), and `inject()` arms that seam for the duration of a
+`with` block.
+
+Sites are the engine's execution points:
+
+    "packed_sparse" | "packed_dense" | "bucketed_mega" | "two_kernel"
+    | "reference"          — score-path kernel calls (one per bucket/pack)
+    "embed"                — the per-bucket embedding call (cache misses)
+    "embed_fallback"       — the reference retry of a failed embed bucket
+    "head"                 — the fused NTN+FCN head
+    "head_fallback"        — the reference retry of a failed head call
+    "train:packed_sparse" | "train:packed_dense" | "train:reference"
+                           — loss_and_grad executor calls
+
+Modes:
+
+    "raise"  — raise `FaultError` (a generic kernel crash);
+    "oom"    — raise `ResourceExhausted` (simulated RESOURCE_EXHAUSTED /
+               VMEM exhaustion on the chosen path);
+    "nan"    — let the call run, then replace every floating leaf of the
+               result with NaN (a silently-corrupting kernel — the hardest
+               failure class, caught by the engine's finite checks).
+
+`after` skips the first N matching calls before firing; `times` bounds how
+many calls fire (None = every one while armed). Multiple `inject()` blocks
+nest; each returns its `FaultPlan` whose `calls`/`triggered` counters let
+tests assert exactly which executions were hit.
+
+    with faults.inject("packed_sparse", mode="raise") as plan:
+        out = engine.score(pairs)          # completes via packed_dense
+    assert plan.triggered >= 1
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+class FaultError(RuntimeError):
+    """An injected kernel failure (generic crash)."""
+
+
+class ResourceExhausted(FaultError):
+    """An injected allocation failure — stands in for the XLA
+    RESOURCE_EXHAUSTED family (VMEM/HBM OOM on a specific path)."""
+
+
+@dataclass
+class FaultPlan:
+    """One armed fault: where, how, and when it fires (plus observed
+    counters for assertions)."""
+    site: str
+    mode: str = "raise"            # raise | oom | nan
+    after: int = 0                 # skip the first `after` matching calls
+    times: int | None = None       # fire at most this many times
+    calls: int = field(default=0, init=False)       # matching calls seen
+    triggered: int = field(default=0, init=False)   # calls actually failed
+
+    def _fires(self) -> bool:
+        i = self.calls
+        self.calls += 1
+        if i < self.after or (self.times is not None
+                              and self.triggered >= self.times):
+            return False
+        self.triggered += 1
+        return True
+
+
+_ACTIVE: list[FaultPlan] = []
+
+
+def _nan_like(x):
+    x = jnp.asarray(x) if not hasattr(x, "dtype") else x
+    if jnp.issubdtype(x.dtype, jnp.inexact):
+        return jnp.full_like(x, jnp.nan)
+    return x
+
+
+def _hook(site: str, thunk):
+    """The seam the engine calls around every executor invocation."""
+    corrupt = False
+    for plan in list(_ACTIVE):
+        if plan.site != site:
+            continue
+        if plan._fires():
+            if plan.mode == "oom":
+                raise ResourceExhausted(
+                    f"injected RESOURCE_EXHAUSTED at {site} "
+                    f"(call {plan.calls - 1})")
+            if plan.mode == "raise":
+                raise FaultError(
+                    f"injected fault at {site} (call {plan.calls - 1})")
+            corrupt = True                          # mode == "nan"
+    out = thunk()
+    if corrupt:
+        out = jax.tree.map(_nan_like, out)
+    return out
+
+
+@contextmanager
+def inject(site: str, mode: str = "raise", *, after: int = 0,
+           times: int | None = None):
+    """Arm one fault for the duration of the block; yields its FaultPlan."""
+    if mode not in ("raise", "oom", "nan"):
+        raise ValueError(f"unknown fault mode {mode!r}")
+    from repro.core import engine as engine_mod
+
+    plan = FaultPlan(site, mode, after, times)
+    _ACTIVE.append(plan)
+    engine_mod._FAULT_HOOK = _hook
+    try:
+        yield plan
+    finally:
+        _ACTIVE.remove(plan)
+        if not _ACTIVE:
+            engine_mod._FAULT_HOOK = None

@@ -121,13 +121,30 @@ def build_simgnn_train_step(engine, *, peak_lr: float = 1e-3,
     (e.g. `data.graphs.pair_stream` batches). The engine packs once per
     batch and reuses the packed layout across `accum_steps` accumulation
     microbatches; the optimizer update runs in one jitted region.
+
+    Non-finite guard (DESIGN.md §12): if the loss or any gradient leaf is
+    NaN/Inf after the engine has exhausted its own degradation options, the
+    update is SKIPPED — params and optimizer state pass through unchanged
+    (no momentum poisoning, no step-count advance), the skip is counted on
+    `engine.counters["train_skipped_steps"]`, and the metrics carry
+    `skipped=1` so loops and dashboards can see the gap.
     """
+    from repro.core.engine import tree_all_finite
+
     apply = build_simgnn_apply(peak_lr=peak_lr, max_grad_norm=max_grad_norm)
 
     def step_fn(params, opt_state, batch):
         loss, grads = engine.loss_and_grad(batch["pairs"], batch["target"],
                                            params=params,
                                            accum_steps=accum_steps)
+        if not tree_all_finite(loss, grads):
+            engine.counters["train_skipped_steps"] += 1
+            metrics = {"loss": loss.astype(jnp.float32),
+                       "grad_norm": jnp.zeros((), jnp.float32),
+                       "lr": jnp.zeros((), jnp.float32),
+                       "step": opt_state.step,
+                       "skipped": jnp.ones((), jnp.float32)}
+            return params, opt_state, metrics
         return apply(params, opt_state, loss, grads)
 
     return step_fn

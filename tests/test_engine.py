@@ -129,6 +129,31 @@ def test_empty_call():
     assert out.shape == (0,)
 
 
+@pytest.mark.parametrize("path", ["auto"] + list(PATHS))
+def test_empty_call_contract_every_path(path):
+    """score([]) returns an empty float32 vector on EVERY path — no
+    executor runs, no exception, and the plan is still published."""
+    engine = ScoringEngine(PARAMS, CFG, path=path)
+    out = engine.score([])
+    assert out.shape == (0,) and out.dtype == np.float32
+    assert engine.last_plan is not None
+    assert engine.last_plan.stats.n_pairs == 0
+    assert len(engine.last_plan.fit_idx) == len(engine.last_plan.over_idx) \
+        == 0
+
+
+def test_empty_call_contract_loss_and_grad():
+    """loss_and_grad([], []) returns zero loss and an all-zero grad tree
+    shaped like params — an empty stream batch is a no-op update, not a
+    crash."""
+    engine = ScoringEngine(PARAMS, CFG)
+    loss, grads = engine.loss_and_grad([], [])
+    assert float(loss) == 0.0
+    assert jax.tree.structure(grads) == jax.tree.structure(PARAMS)
+    assert all(float(np.abs(g).max(initial=0.0)) == 0.0
+               for g in jax.tree.leaves(grads))
+
+
 def test_workload_stats_measured():
     engine = ScoringEngine(PARAMS, CFG)
     pairs = _mixed_pairs(5, 10)
