@@ -27,10 +27,17 @@ trajectory baseline, not TPU times.
 Usage:  PYTHONPATH=src python benchmarks/search.py [--tiny] [--check]
             [--batch 512] [--corpus 256] [--out search_bench.json]
 
+A fifth `persist` record times the durable-index restart story
+(DESIGN.md §13): `server.save()` -> cold-process `load()` of the verified
+shards vs cold-process `index()` rebuild, with the loaded matrix's parity
+vs the built one.
+
 `--check` (CI gate): non-zero exit if the fused head drifts >1e-6 from the
 reference NTN+FCN on identical embeddings, if warm cached end-to-end scores
-drift >1e-6 from the reference scorer, or if the warm cached policy is not
->= 5x faster than uncached packed-sparse.
+drift >1e-6 from the reference scorer, if the loaded index drifts >1e-6
+from the built one (it round-trips raw float32, so anything non-zero is a
+store bug), if the warm cached policy is not >= 5x faster than uncached
+packed-sparse, or if loading the persisted index is slower than rebuilding.
 """
 
 from __future__ import annotations
@@ -38,7 +45,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import shutil
 import sys
+import tempfile
 import time
 
 import jax
@@ -93,6 +102,32 @@ def run(batch: int = 512, n_corpus: int = 256, n_query_batches: int = 4,
     server.index(corpus)
     index_seconds = time.perf_counter() - t0
     warm = server.engine
+
+    # Persisted-index restart costs (DESIGN.md §13): save the resident
+    # index, then time two cold restarts — one rebuilding from the corpus
+    # (fresh engine: pays embed jit + every GCN+Att), one adopting the
+    # verified on-disk shards. Both are one-shot costs, timed once, and
+    # parity is checked bitwise-ish (raw float32 round-trip -> 0.0).
+    idx_dir = tempfile.mkdtemp(prefix="simgnn_index_")
+    try:
+        t0 = time.perf_counter()
+        server.save(idx_dir)
+        save_seconds = time.perf_counter() - t0
+        rebuild_srv = SimilaritySearchServer(params, CFG,
+                                             cache_size=cache_size)
+        t0 = time.perf_counter()
+        rebuild_srv.index(corpus)
+        rebuild_seconds = time.perf_counter() - t0
+        load_srv = SimilaritySearchServer(params, CFG,
+                                          cache_size=cache_size)
+        t0 = time.perf_counter()
+        load_srv.load(idx_dir, corpus)
+        load_seconds = time.perf_counter() - t0
+        persist_parity = float(np.max(np.abs(
+            load_srv.corpus_emb - server.corpus_emb)))
+        persist_recovered = load_srv.stats.shards_recovered
+    finally:
+        shutil.rmtree(idx_dir, ignore_errors=True)
 
     # validation="off" on the timed comparators: trusted generator stream,
     # and the per-call adjacency scan would tax every policy's timings.
@@ -181,10 +216,28 @@ def run(batch: int = 512, n_corpus: int = 256, n_query_batches: int = 4,
         records.append(rec)
         print("BENCH " + json.dumps(rec))
 
+    # Restart-cost policies (one-shot timings, not per-call medians).
+    persist = {"bench": "search", "stream": "zipf", "batch": batch,
+               "n_corpus": n_corpus, "policy": "persist",
+               "save_seconds": round(save_seconds, 6),
+               "load_seconds": round(load_seconds, 6),
+               "rebuild_seconds": round(rebuild_seconds, 6),
+               "load_vs_rebuild_speedup":
+                   round(rebuild_seconds / max(load_seconds, 1e-9), 3),
+               "persist_parity": persist_parity,
+               "shards_recovered": persist_recovered}
+    records.append(persist)
+    print("BENCH " + json.dumps(persist))
+
     summary = {"bench": "search", "stream": "zipf", "batch": batch,
                "policy": "summary", "n_corpus": n_corpus,
                "hit_rate": hit_stats["hit_rate"],
                "head_parity": head_parity, "e2e_parity": e2e_parity,
+               "persist_parity": persist_parity,
+               "load_seconds": round(load_seconds, 6),
+               "rebuild_seconds": round(rebuild_seconds, 6),
+               "load_vs_rebuild_speedup":
+                   round(rebuild_seconds / max(load_seconds, 1e-9), 3),
                "warm_speedup_vs_uncached_sparse":
                    round(seconds["uncached_sparse"] / seconds["cached_warm"], 3),
                "warm_speedup_vs_two_kernel":
@@ -226,6 +279,9 @@ def main():
         failures.append(f"warm cached end-to-end parity "
                         f"{summary['e2e_parity']:.2e} > "
                         f"{PARITY_BOUND:.0e}")
+    if summary["persist_parity"] > PARITY_BOUND:
+        failures.append(f"persisted-index parity {summary['persist_parity']:.2e}"
+                        f" > {PARITY_BOUND:.0e} (load != build)")
     # The 5x bound is an at-scale contract (batch 512): at --tiny sizes
     # per-call dispatch overhead dominates every policy equally and the
     # ratio is noise, so tiny checks gate parity only.
@@ -235,6 +291,13 @@ def main():
             "warm cached path only "
             f"{summary['warm_speedup_vs_uncached_sparse']}x vs uncached "
             f"packed-sparse (bound {SPEEDUP_BOUND:g}x)")
+    # Loading the verified shards must beat re-embedding the corpus in a
+    # fresh process, or persistence buys nothing (DESIGN.md §13). Skipped
+    # at --tiny sizes like the other speed gates.
+    if not a.tiny and summary["load_vs_rebuild_speedup"] < 1.0:
+        failures.append(
+            f"persisted-index load ({summary['load_seconds']}s) slower "
+            f"than rebuild ({summary['rebuild_seconds']}s)")
     finish_check(records, failures, bench="search", out=a.out, check=a.check)
 
 

@@ -48,6 +48,11 @@ def main():
                          "queries through the embedding cache (§10)")
     ap.add_argument("--corpus", type=int, default=256,
                     help="corpus size for --topk mode")
+    ap.add_argument("--index-dir", default=None,
+                    help="persist/reload the corpus index here (§13): "
+                         "loads the verified shard store if present "
+                         "(selectively re-embedding bad shards), else "
+                         "builds the index once and saves it")
     args = ap.parse_args()
 
     params = init_simgnn_params(jax.random.PRNGKey(0), CFG)
@@ -87,16 +92,36 @@ def main():
 
 
 def run_topk(params, args):
-    """1-vs-N similarity search through the embedding cache (§10)."""
+    """1-vs-N similarity search through the embedding cache (§10), with
+    optional durable-index persist/reload (§13)."""
+    from repro.core.store import StoreError
+
     server = SimilaritySearchServer(params, CFG,
                                     embed_with_kernels=args.kernels)
     corpus = zipf_corpus(seed=1, n_corpus=args.corpus,
                          avg_degree=args.avg_degree)
-    t0 = time.time()
-    server.index(corpus)
-    print(f"indexed {len(corpus)} corpus graphs in {time.time() - t0:.2f}s "
-          f"(embeddings resident, LRU {server.engine.cache.stats()['size']} "
-          f"entries)")
+    loaded = False
+    if args.index_dir:
+        t0 = time.time()
+        try:
+            server.load(args.index_dir, corpus)
+            st = server.stats
+            print(f"loaded persisted index from {args.index_dir} in "
+                  f"{time.time() - t0:.2f}s ({st.shards_loaded} shards "
+                  f"verified, {st.shards_recovered} recovered, "
+                  f"{st.rows_reembedded} rows re-embedded)")
+            loaded = True
+        except StoreError as exc:
+            print(f"persisted index unusable ({exc}); rebuilding")
+    if not loaded:
+        t0 = time.time()
+        server.index(corpus)
+        print(f"indexed {len(corpus)} corpus graphs in "
+              f"{time.time() - t0:.2f}s (embeddings resident, LRU "
+              f"{server.engine.cache.stats()['size']} entries)")
+        if args.index_dir:
+            server.save(args.index_dir)
+            print(f"saved index shards + manifest to {args.index_dir}")
 
     stream = zipf_query_stream(seed=1, batch=args.batch,
                                n_corpus=args.corpus,

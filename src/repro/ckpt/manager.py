@@ -1,15 +1,23 @@
-"""Checkpointing: sharded, atomic, keep-k, async — the fault-tolerance
-substrate (DESIGN.md §6).
+"""Checkpointing: sharded, atomic, keep-k, async, integrity-verified — the
+fault-tolerance substrate (DESIGN.md §6, §13).
 
 Layout per step:
     <dir>/step_<N>.tmp/            (written first)
-        manifest.msgpack           tree structure + dtypes + shapes + mesh
         arrays.npz                 flat leaves (per-host shards on a fleet)
+        manifest.msgpack           tree structure + dtypes + shapes +
+                                   format version + per-file checksums
+                                   (written LAST: it is the commit record)
     <dir>/step_<N>/                (atomic rename when complete)
 
-Restart contract: `latest_step()` ignores .tmp directories, so a job killed
-mid-save resumes from the previous complete checkpoint — tested in
-tests/test_ckpt.py by simulating a crash between write and rename.
+Restart contract: `latest_step()` ignores .tmp directories (and sweeps
+orphaned ones left by crashed saves), so a job killed mid-save resumes from
+the previous complete checkpoint. Since DESIGN.md §13 "complete" also means
+*valid*: every durable write goes through `core.store.atomic_write_bytes`
+(tmp+fsync+rename, and the fault seam for chaos tests), the manifest
+records a format version and a blake2b checksum per arrays file, and
+`restore()` verifies them before deserializing — `latest_valid_step()`
+walks the keep-k chain newest-to-oldest past torn/bit-flipped/missing
+checkpoints instead of crashing on (or worse, loading) garbage.
 
 On a multi-host fleet each host writes its addressable shards
 (`arrays.<process_index>.npz`) and process 0 writes the manifest; this
@@ -21,6 +29,7 @@ per-leaf here and re-laid-out onto the target mesh's NamedShardings).
 
 from __future__ import annotations
 
+import io
 import os
 import re
 import shutil
@@ -31,6 +40,30 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+from repro.core.store import StoreError, atomic_write_bytes, checksum
+
+#: Bump when the manifest schema or arrays encoding changes; restore
+#: refuses other versions (the §13 stale-manifest contract).
+CKPT_FORMAT_VERSION = 1
+
+#: tmp directories of saves currently in flight IN THIS PROCESS — the
+#: orphan sweep skips them so `latest_step()` racing an async save never
+#: deletes the save out from under its own writer thread. Crashed saves
+#: (a fresh process) have no entry here and get swept.
+_ACTIVE_TMPS: set[str] = set()
+_ACTIVE_LOCK = threading.Lock()
+
+
+class CheckpointCorrupt(StoreError):
+    """A checkpoint failed integrity verification; `.step` and `.problems`
+    carry the structured diagnosis (the §13 never-load-garbage contract)."""
+
+    def __init__(self, step: int, problems: list[str]):
+        super().__init__(f"checkpoint step {step} failed verification: "
+                         + "; ".join(problems))
+        self.step = step
+        self.problems = list(problems)
 
 
 def _flatten_with_paths(tree):
@@ -50,31 +83,69 @@ def _k(p) -> str:
     return str(p)
 
 
+def sweep_orphan_tmps(directory: str) -> list[str]:
+    """Remove `step_<N>.tmp` directories left by crashed saves; returns the
+    names removed. Called from `save()` and `latest_step()` so orphans
+    never accumulate (DESIGN.md §13 satellite). In-flight saves of THIS
+    process (`_ACTIVE_TMPS`) are exempt."""
+    if not os.path.isdir(directory):
+        return []
+    removed = []
+    with _ACTIVE_LOCK:
+        active = set(_ACTIVE_TMPS)
+    for name in os.listdir(directory):
+        if not re.fullmatch(r"step_\d+\.tmp", name):
+            continue
+        path = os.path.join(directory, name)
+        if path in active:
+            continue
+        shutil.rmtree(path, ignore_errors=True)
+        removed.append(name)
+    return removed
+
+
 def save(directory: str, step: int, tree: Any, *, keep: int = 3,
          process_index: int = 0, blocking: bool = True) -> str:
     """Write checkpoint for `step`; returns the final path."""
     os.makedirs(directory, exist_ok=True)
+    sweep_orphan_tmps(directory)
     tmp = os.path.join(directory, f"step_{step:09d}.tmp")
     final = os.path.join(directory, f"step_{step:09d}")
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
+    with _ACTIVE_LOCK:
+        _ACTIVE_TMPS.add(tmp)
+    try:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
 
-    keys, vals, _ = _flatten_with_paths(tree)
-    host_vals = [np.asarray(v) for v in vals]          # device -> host
-    manifest = {
-        "keys": keys,
-        "dtypes": [str(v.dtype) for v in host_vals],
-        "shapes": [list(v.shape) for v in host_vals],
-        "step": step,
-    }
-    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
-        f.write(msgpack.packb(manifest))
-    np.savez(os.path.join(tmp, f"arrays.{process_index}.npz"),
-             **{str(i): v for i, v in enumerate(host_vals)})
-    if os.path.exists(final):                          # re-save of same step
-        shutil.rmtree(final)
-    os.rename(tmp, final)                              # atomic commit
+        keys, vals, _ = _flatten_with_paths(tree)
+        host_vals = [np.asarray(v) for v in vals]      # device -> host
+        arrays_name = f"arrays.{process_index}.npz"
+        buf = io.BytesIO()
+        np.savez(buf, **{str(i): v for i, v in enumerate(host_vals)})
+        arrays_bytes = buf.getvalue()
+        manifest = {
+            "format_version": CKPT_FORMAT_VERSION,
+            "keys": keys,
+            "dtypes": [str(v.dtype) for v in host_vals],
+            "shapes": [list(v.shape) for v in host_vals],
+            "step": step,
+            "checksums": {arrays_name: checksum(arrays_bytes)},
+        }
+        # Arrays first, manifest LAST: the manifest is the commit record —
+        # verification treats "manifest present but an arrays file torn"
+        # as corruption, and a crash before the manifest leaves a tmp dir
+        # the sweep reclaims.
+        atomic_write_bytes(os.path.join(tmp, arrays_name), arrays_bytes,
+                           site="ckpt:arrays")
+        atomic_write_bytes(os.path.join(tmp, "manifest.msgpack"),
+                           msgpack.packb(manifest), site="ckpt:manifest")
+        if os.path.exists(final):                      # re-save of same step
+            shutil.rmtree(final)
+        os.rename(tmp, final)                          # atomic commit
+    finally:
+        with _ACTIVE_LOCK:
+            _ACTIVE_TMPS.discard(tmp)
     _gc(directory, keep)
     return final
 
@@ -99,6 +170,7 @@ def save_async(directory: str, step: int, tree: Any, *, keep: int = 3):
 def latest_step(directory: str) -> int | None:
     if not os.path.isdir(directory):
         return None
+    sweep_orphan_tmps(directory)
     steps = []
     for name in os.listdir(directory):
         m = re.fullmatch(r"step_(\d+)", name)
@@ -108,15 +180,97 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def _read_manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read())
+
+
+def verify_step(directory: str, step: int) -> list[str]:
+    """Integrity report for one checkpoint — empty list means valid.
+
+    Checks, in order of how little can be trusted when they fail: manifest
+    present and unpackable, format version supported, every checksummed
+    arrays file present with matching size and blake2b. Content problems
+    (wrong tree structure for a given `like`) are restore()'s job — they
+    depend on the caller, not the bytes.
+    """
+    path = os.path.join(directory, f"step_{step:09d}")
+    if not os.path.isdir(path):
+        return [f"missing checkpoint directory {path}"]
+    try:
+        manifest = _read_manifest(path)
+    except FileNotFoundError:
+        return ["manifest missing"]
+    except Exception as exc:                           # torn/garbled msgpack
+        return [f"manifest unreadable: {exc!r}"]
+    version = manifest.get("format_version")
+    if version != CKPT_FORMAT_VERSION:
+        return [f"unsupported format_version {version!r} "
+                f"(expected {CKPT_FORMAT_VERSION})"]
+    problems = []
+    checksums = manifest.get("checksums", {})
+    if not checksums:
+        problems.append("manifest carries no checksums")
+    for name, want in checksums.items():
+        fpath = os.path.join(path, name)
+        if not os.path.exists(fpath):
+            problems.append(f"{name} missing")
+            continue
+        with open(fpath, "rb") as f:
+            got = checksum(f.read())
+        if got != want:
+            problems.append(f"{name} checksum mismatch "
+                            f"(manifest {want[:8]}.., file {got[:8]}..)")
+    return problems
+
+
+def valid_steps(directory: str) -> tuple[list[int], list[tuple[int, list]]]:
+    """All complete steps split into (valid, [(step, problems), ...]),
+    both newest-first."""
+    steps = []
+    if os.path.isdir(directory):
+        sweep_orphan_tmps(directory)
+        for name in os.listdir(directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                steps.append(int(m.group(1)))
+    good, bad = [], []
+    for s in sorted(steps, reverse=True):
+        problems = verify_step(directory, s)
+        (good.append(s) if not problems else bad.append((s, problems)))
+    return good, bad
+
+
+def latest_valid_step(directory: str
+                      ) -> tuple[int | None, list[tuple[int, list]]]:
+    """Newest checkpoint that passes verification, walking the keep-k
+    chain back past corrupt ones (DESIGN.md §13 recovery ladder). Returns
+    (step or None, skipped) where skipped lists every NEWER checkpoint
+    that failed, with its problems — callers surface these as counters."""
+    good, bad = valid_steps(directory)
+    best = good[0] if good else None
+    skipped = [(s, p) for s, p in bad if best is None or s > best]
+    return best, skipped
+
+
 def restore(directory: str, step: int, like: Any, *,
-            shardings: Any = None) -> Any:
+            shardings: Any = None, verify: bool = True) -> Any:
     """Restore into the structure of `like` (a pytree of arrays or
     ShapeDtypeStructs). If `shardings` is given (pytree of NamedSharding),
     leaves are placed onto devices with jax.device_put — this is also the
-    elastic-resharding entry point (save on mesh A, restore on mesh B)."""
+    elastic-resharding entry point (save on mesh A, restore on mesh B).
+
+    `verify=True` (default) checks format version + checksums first and
+    raises `CheckpointCorrupt` instead of deserializing damaged bytes —
+    torn npz archives can otherwise yield shape errors deep inside numpy
+    or, worse, silently truncated leaves.
+    """
+    if verify:
+        problems = verify_step(directory, step)
+        if problems:
+            raise CheckpointCorrupt(step, problems)
     path = os.path.join(directory, f"step_{step:09d}")
-    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
+    manifest = _read_manifest(path)
     arrays = {}
     for name in sorted(os.listdir(path)):
         if name.startswith("arrays.") and name.endswith(".npz"):

@@ -54,13 +54,26 @@ def train_simgnn(args):
             print("[train] simulated failure!")
             os._exit(42)
 
+    def on_resume(step, skipped):
+        # Land the verified-restore outcome on the engine's counters so
+        # `engine.health()` reports the resume story next to the breakers
+        # (DESIGN.md §13): how many corrupt checkpoints the walk-back
+        # skipped, and whether a resume happened at all.
+        if step is not None:
+            engine.counters["ckpt_resumes"] += 1
+        engine.counters["ckpt_walkback_skipped"] += len(skipped)
+
     params, opt_state, hist = loop.run(
         step_fn, params, opt_state, batch_fn, n_steps=args.steps,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-        resume=args.resume, on_metrics=on_metrics)
+        resume=args.resume, on_metrics=on_metrics, on_resume=on_resume)
     if engine.counters.get("train_skipped_steps"):
         print(f"[train] skipped {engine.counters['train_skipped_steps']} "
               "non-finite steps")
+    if engine.counters.get("ckpt_walkback_skipped"):
+        print(f"[train] resume walked back past "
+              f"{engine.counters['ckpt_walkback_skipped']} corrupt "
+              "checkpoint(s)")
     print(f"[train] final loss {hist[-1]['loss']:.5f}")
     return hist
 

@@ -21,7 +21,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.cache import graph_key
 from repro.core.engine import ScoringEngine
+from repro.core.store import ShardStore, StoreError, tree_digest
 
 
 @dataclass
@@ -35,6 +37,10 @@ class SearchStats:
     failed_embeddings: int = 0     # corpus rows that are NaN after indexing
                                    # (their embed bucket AND its reference
                                    # retry failed — DESIGN.md §12)
+    shards_loaded: int = 0         # shards restored verified from disk (§13)
+    shards_recovered: int = 0      # shards that failed verification and
+                                   # were selectively re-embedded
+    rows_reembedded: int = 0       # corpus rows recomputed during load()
     embed_seconds: float = 0.0     # query-side embedding (+ any corpus misses)
     head_seconds: float = 0.0      # NTN+FCN over the corpus
     topk_seconds: float = 0.0      # host-side partial sort
@@ -44,6 +50,9 @@ class SearchStats:
         return {"queries": self.queries, "pairs_scored": self.pairs_scored,
                 "index_size": self.index_size,
                 "failed_embeddings": self.failed_embeddings,
+                "shards_loaded": self.shards_loaded,
+                "shards_recovered": self.shards_recovered,
+                "rows_reembedded": self.rows_reembedded,
                 "embed_seconds": round(self.embed_seconds, 6),
                 "head_seconds": round(self.head_seconds, 6),
                 "topk_seconds": round(self.topk_seconds, 6),
@@ -94,6 +103,101 @@ class SimilaritySearchServer:
         self.stats.cache = self.engine.cache.stats()
         return self.corpus_emb
 
+    # ------------------------------------------------------------ durability
+
+    def save(self, directory: str, *, shard_rows: int = 256) -> dict:
+        """Persist the resident index (DESIGN.md §13): the `[N, F]` matrix
+        in checksummed row shards plus a versioned manifest recording the
+        WL `graph_key` of every row and a digest of the model params —
+        restarts and other replicas `load()` it instead of re-embedding
+        the corpus. Returns the manifest."""
+        if self.corpus_emb is None:
+            raise ValueError("no corpus indexed; call index(corpus) first")
+        keys = [graph_key(g).hex() for g in self.corpus]
+        return ShardStore(directory).write(
+            np.ascontiguousarray(self.corpus_emb, np.float32),
+            shard_rows=shard_rows, graph_keys=keys,
+            meta={"kind": "similarity_index",
+                  "params_digest": tree_digest(self.engine.params),
+                  "n_graphs": len(self.corpus),
+                  "feat_dim": int(self.corpus_emb.shape[1])})
+
+    def load(self, directory: str, corpus: list[dict]) -> np.ndarray:
+        """Adopt a persisted index for `corpus` (DESIGN.md §13 recovery
+        ladder). Every shard is checksum-verified and its recorded
+        `graph_key`s compared to the corpus rows it claims to cover; shards
+        that verify are mmap-read, shards that are missing / torn /
+        bit-flipped / mismatched are SELECTIVELY re-embedded from the
+        corpus graphs — counted on `stats`/`health()`, never a silent full
+        rebuild. Manifest-level problems (missing, unreadable, stale
+        format version, wrong model params, wrong corpus size) raise a
+        structured `StoreError`: with an untrustworthy manifest there is
+        no per-shard story, and serving scores from it would violate the
+        never-serve-corrupt-state contract. Bit-identical to `index()` on
+        a clean store (embeddings round-trip as raw float32 bytes)."""
+        store = ShardStore(directory)
+        man = store.manifest()                 # ManifestError on stale/bad
+        meta = man.get("meta", {})
+        if meta.get("params_digest") != tree_digest(self.engine.params):
+            raise StoreError(
+                f"index at {directory} was built by a different model "
+                f"(params digest {meta.get('params_digest')!r}): scores "
+                "from it would be silently wrong — rebuild with index()")
+        if meta.get("n_graphs") != len(corpus):
+            raise StoreError(
+                f"index at {directory} covers {meta.get('n_graphs')} "
+                f"graphs but the corpus has {len(corpus)}")
+        n, f = int(man["shape"][0]), int(man["shape"][1])
+        counters = self.engine.counters        # surfaces via health()
+        out = np.zeros((n, f), np.float32)
+        corpus = list(corpus)
+        row = 0
+        loaded = recovered = reembedded = 0
+        for info in store.shard_infos(man):
+            rows = info.shape[0]
+            status = store.verify_shard(info)
+            if status == "ok" and info.graph_keys:
+                actual = [graph_key(corpus[i]).hex()
+                          for i in range(row, row + rows)]
+                if list(info.graph_keys) != actual:
+                    status = "key_mismatch"
+            if status == "ok":
+                out[row:row + rows] = store.read_shard(info)
+                loaded += 1
+            else:
+                counters[f"store_shard_{status}"] += 1
+                # Selective recovery: re-embed ONLY this shard's rows (the
+                # engine's embed path — identical bytes to index()'s).
+                out[row:row + rows] = self.engine.embed_graphs(
+                    corpus[row:row + rows])
+                recovered += 1
+                reembedded += rows
+            row += rows
+        if row != n:
+            raise StoreError(f"manifest shards cover {row} rows but claim "
+                             f"shape[0]={n}")
+        self.corpus = corpus
+        self.corpus_emb = out
+        self.stats.index_size = n
+        self.stats.shards_loaded += loaded
+        self.stats.shards_recovered += recovered
+        self.stats.rows_reembedded += reembedded
+        counters["store_shards_loaded"] += loaded
+        counters["store_shards_recovered"] += recovered
+        counters["store_rows_reembedded"] += reembedded
+        self.stats.failed_embeddings = int(
+            (~np.isfinite(out).all(axis=-1)).sum())
+        # Re-populate the LRU exactly as index() would have, so mixed
+        # flows (`engine.score` on pairs touching corpus graphs) hit — and
+        # eviction stays irrelevant to the resident matrix either way.
+        for g, emb in zip(corpus, out):
+            if np.isfinite(emb).all():
+                emb = np.array(emb, np.float32)
+                emb.setflags(write=False)
+                self.engine.cache.put(graph_key(g), emb)
+        self.stats.cache = self.engine.cache.stats()
+        return out
+
     # -------------------------------------------------------------- querying
 
     def topk(self, query: dict, k: int = 10) -> tuple[np.ndarray, np.ndarray]:
@@ -135,10 +239,15 @@ class SimilaritySearchServer:
 
     def health(self) -> dict:
         """Engine fault-tolerance state plus the server's own view of the
-        index (DESIGN.md §12) — one call for dashboards/tests."""
+        index (DESIGN.md §12/§13) — one call for dashboards/tests. The
+        durable-state counters (`store_*`, `ckpt_*`) ride inside the
+        engine's counter dict."""
         return {**self.engine.health(),
                 "index_size": self.stats.index_size,
-                "failed_embeddings": self.stats.failed_embeddings}
+                "failed_embeddings": self.stats.failed_embeddings,
+                "shards_loaded": self.stats.shards_loaded,
+                "shards_recovered": self.stats.shards_recovered,
+                "rows_reembedded": self.stats.rows_reembedded}
 
     @property
     def hit_rate(self) -> float:

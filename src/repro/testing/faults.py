@@ -127,3 +127,124 @@ def inject(site: str, mode: str = "raise", *, after: int = 0,
         _ACTIVE.remove(plan)
         if not _ACTIVE:
             engine_mod._FAULT_HOOK = None
+
+
+# --------------------------------------------------------------------------
+# Filesystem faults (DESIGN.md §13): the durable-state twin of the executor
+# seam above. Every durable write in the repo funnels through
+# `core.store.atomic_write_bytes(path, data, site=...)`; `fs_inject()` arms
+# its `_FS_HOOK` so a chaos test can corrupt EXACTLY the bytes of one named
+# write — no sleeping on race windows, no real disk errors required. Sites:
+#
+#     "store:shard"    — one ShardStore row-shard file
+#     "store:manifest" — the ShardStore JSON manifest
+#     "ckpt:arrays"    — a checkpoint's arrays.<proc>.npz payload
+#     "ckpt:manifest"  — a checkpoint's msgpack manifest
+#
+# Write-time modes (what reaches the disk despite the writer's fsync path):
+#
+#     "torn"    — the write is truncated at byte `at_byte` (default: half);
+#     "bitflip" — one bit of byte `at_byte` is flipped (silent bit rot);
+#     "missing" — the write is dropped entirely, the writer believes it
+#                 succeeded (lost write / dropped flush);
+#     "stale"   — manifest sites only: the manifest is written with a
+#                 format version this reader does not support (a replica
+#                 running newer code wrote the index).
+#
+# `corrupt_file()` applies the same damage to a file already on disk — the
+# at-rest corruption story (the write was fine; the disk rotted later).
+
+
+@dataclass
+class FsFaultPlan:
+    """One armed filesystem fault, with observed counters for assertions."""
+    site: str
+    mode: str = "torn"             # torn | bitflip | missing | stale
+    at_byte: int | None = None     # position for torn/bitflip (default mid)
+    after: int = 0
+    times: int | None = None
+    calls: int = field(default=0, init=False)
+    triggered: int = field(default=0, init=False)
+
+    _fires = FaultPlan._fires
+
+
+_FS_ACTIVE: list[FsFaultPlan] = []
+
+
+def _damage_bytes(data: bytes, mode: str, at_byte: int | None,
+                  site: str) -> bytes | None:
+    if mode == "missing":
+        return None
+    if mode == "stale":
+        if not site.endswith("manifest"):
+            raise ValueError(f"mode 'stale' only applies to manifest sites, "
+                             f"got {site!r}")
+        if site.startswith("store:"):
+            import json
+
+            man = json.loads(data.decode())
+            man["format_version"] = man.get("format_version", 0) + 1000
+            return json.dumps(man).encode()
+        import msgpack
+
+        man = msgpack.unpackb(data)
+        man["format_version"] = man.get("format_version", 0) + 1000
+        return msgpack.packb(man)
+    at = len(data) // 2 if at_byte is None else min(at_byte, len(data) - 1)
+    if mode == "torn":
+        return data[:at]
+    buf = bytearray(data)          # mode == "bitflip"
+    buf[at] ^= 0x01
+    return bytes(buf)
+
+
+def _fs_hook(site: str, path: str, data: bytes) -> bytes | None:
+    for plan in list(_FS_ACTIVE):
+        if plan.site != site:
+            continue
+        if plan._fires():
+            data = _damage_bytes(data, plan.mode, plan.at_byte, site)
+            if data is None:
+                return None
+    return data
+
+
+@contextmanager
+def fs_inject(site: str, mode: str = "torn", *, at_byte: int | None = None,
+              after: int = 0, times: int | None = None):
+    """Arm one filesystem fault for the block; yields its FsFaultPlan."""
+    if mode not in ("torn", "bitflip", "missing", "stale"):
+        raise ValueError(f"unknown filesystem fault mode {mode!r}")
+    from repro.core import store as store_mod
+
+    plan = FsFaultPlan(site, mode, at_byte, after, times)
+    _FS_ACTIVE.append(plan)
+    store_mod._FS_HOOK = _fs_hook
+    try:
+        yield plan
+    finally:
+        _FS_ACTIVE.remove(plan)
+        if not _FS_ACTIVE:
+            store_mod._FS_HOOK = None
+
+
+def corrupt_file(path: str, mode: str = "bitflip", *,
+                 at_byte: int | None = None) -> None:
+    """Deterministically damage a file already on disk (at-rest bit rot /
+    truncation / loss), bypassing the atomic-write seam on purpose: the
+    write succeeded, the DISK failed later."""
+    import os
+
+    if mode == "missing":
+        os.remove(path)
+        return
+    # Map the file back to its manifest dialect so mode="stale" works at
+    # rest too (store manifests are JSON, checkpoint manifests msgpack).
+    site = ("store:manifest" if path.endswith(".json")
+            else "ckpt:manifest" if path.endswith(".msgpack") else path)
+    with open(path, "rb") as f:
+        data = f.read()
+    data = _damage_bytes(data, mode, at_byte, site=site)
+    with open(path, "wb") as f:
+        f.write(data)

@@ -48,18 +48,32 @@ def run(step_fn, params, opt_state, batch_fn, *, n_steps: int,
         ckpt_dir: str | None = None, ckpt_every: int = 50,
         resume: str | None = "auto", max_retries: int = 2,
         log_every: int = 10, monitor: StragglerMonitor | None = None,
-        on_metrics=None):
+        on_metrics=None, on_resume=None):
     """Generic driver used by launch/train.py and the failure-recovery test.
-    batch_fn(step) -> batch pytree. Returns (params, opt_state, history)."""
+    batch_fn(step) -> batch pytree. Returns (params, opt_state, history).
+
+    Resume goes through VERIFIED restore (DESIGN.md §13): the newest
+    checkpoint that passes format-version + checksum verification wins, and
+    torn/bit-flipped/missing newer ones are walked past (reported via
+    `on_resume(step, skipped)` so callers can surface counters) — the loop
+    never deserializes a checkpoint it cannot verify.
+    """
     monitor = monitor or StragglerMonitor()
     start = 0
     if ckpt_dir and resume == "auto":
-        last = ckpt.latest_step(ckpt_dir)
+        last, skipped = ckpt.latest_valid_step(ckpt_dir)
+        for s, problems in skipped:
+            print(f"[loop] skipping corrupt checkpoint step {s}: "
+                  f"{problems[0]}")
+        if on_resume is not None:
+            on_resume(last, skipped)
         if last is not None:
             params, opt_state = ckpt.restore(ckpt_dir, last,
                                              (params, opt_state))
             start = last
-            print(f"[loop] resumed from step {last}")
+            print(f"[loop] resumed from step {last}"
+                  + (f" (walked back past {len(skipped)} corrupt)"
+                     if skipped else ""))
 
     history = []
     step = start
@@ -89,7 +103,7 @@ def run(step_fn, params, opt_state, batch_fn, *, n_steps: int,
             retries += 1
             if not ckpt_dir or retries > max_retries:
                 raise
-            last = ckpt.latest_step(ckpt_dir)
+            last, _ = ckpt.latest_valid_step(ckpt_dir)
             print(f"[loop] step {step} failed; restoring step {last} "
                   f"(retry {retries}/{max_retries})")
             if last is not None:

@@ -31,6 +31,30 @@ def _strip(g):
 
 # ------------------------------------------------------------- canonical key
 
+def test_graph_key_golden_hashes_pinned():
+    """Fixed graphs -> fixed digests (DESIGN.md §13): persisted indexes key
+    shards by this WL hash, so ANY change to the refinement (rounds, mixing
+    constants, payload layout) silently invalidates every on-disk index.
+    If this test fails, either revert the hash change or bump
+    `core.store.STORE_FORMAT_VERSION` so old indexes are refused loudly —
+    then re-pin these goldens."""
+    fixed = [
+        ([[0, 1, 0], [1, 0, 1], [0, 1, 0]], [0, 1, 2],
+         "755be6bf1ea052fbbda850cc93286f88"),       # 3-path, distinct labels
+        ([[0, 1, 1], [1, 0, 1], [1, 1, 0]], [5, 5, 5],
+         "1aea8f559ddd5effbfb28b0be1e13fbb"),       # triangle, uniform
+        ([[0]], [3],
+         "4930b142e39aabe76578852e6b6f7606"),       # single node, no edges
+        ([[0, 1, 1, 1], [1, 0, 0, 0], [1, 0, 0, 0], [1, 0, 0, 0]],
+         [2, 0, 0, 1],
+         "9f968a986bc050137c2b19fe86ce6c87"),       # 4-star, mixed labels
+    ]
+    for adj, labels, want in fixed:
+        g = {"adj": np.asarray(adj, np.float32),
+             "labels": np.asarray(labels, np.int32)}
+        assert graph_key(g).hex() == want
+
+
 def test_graph_key_node_permutation_hits():
     rng = np.random.default_rng(0)
     for g in _graphs(1, 10):

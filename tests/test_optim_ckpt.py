@@ -98,6 +98,34 @@ def test_ckpt_crash_mid_save_ignored(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) == 10
 
 
+def test_ckpt_orphan_tmp_swept(tmp_path):
+    """Orphaned step_<N>.tmp directories from crashed saves are reclaimed
+    on the next save AND on the latest_step() scan (DESIGN.md §13
+    satellite) — they used to accumulate forever."""
+    t = _tree()
+    orphan = tmp_path / "step_000000005.tmp"
+    os.makedirs(orphan / "nested")
+    (orphan / "nested" / "arrays.0.npz").write_bytes(b"torn")
+    ckpt.save(str(tmp_path), 10, t)
+    assert not orphan.exists()
+    assert sorted(n for n in os.listdir(tmp_path)) == ["step_000000010"]
+
+    os.makedirs(tmp_path / "step_000000099.tmp")
+    assert ckpt.latest_step(str(tmp_path)) == 10
+    assert not (tmp_path / "step_000000099.tmp").exists()
+    # An in-flight save of this process is exempt from the sweep.
+    live = str(tmp_path / "step_000000042.tmp")
+    os.makedirs(live)
+    with ckpt._ACTIVE_LOCK:
+        ckpt._ACTIVE_TMPS.add(live)
+    try:
+        assert ckpt.sweep_orphan_tmps(str(tmp_path)) == []
+        assert os.path.isdir(live)
+    finally:
+        with ckpt._ACTIVE_LOCK:
+            ckpt._ACTIVE_TMPS.discard(live)
+
+
 def test_ckpt_structure_mismatch_raises(tmp_path):
     ckpt.save(str(tmp_path), 1, _tree())
     bad = {"other": jnp.zeros(3)}

@@ -1,0 +1,426 @@
+"""Disk-chaos suite (DESIGN.md §13): durable-state integrity driven
+deterministically through `repro.testing.faults` — the filesystem twin of
+`tests/test_faults.py`.
+
+Covers the full fault × surface matrix the acceptance criteria name:
+each fault (torn write, bit flip, missing shard/file, stale manifest
+version) against each surface (similarity-index load, train resume)
+either fully recovers (selective re-embed / keep-k walk-back, counted in
+`health()`) or raises a structured error — never silently-corrupt scores
+or training state. Plus: ShardStore primitives (atomic writes, checksum
+verification, mmap read-back), clean save/load bit-identity including
+cache-eviction immunity, and the write-time fault seam itself.
+
+CI runs this file as its own step so a durability regression is
+distinguishable from a functional one at a glance.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ckpt import manager as ckpt
+from repro.core.simgnn import SimGNNConfig, init_simgnn_params
+from repro.core.store import (MANIFEST_NAME, STORE_FORMAT_VERSION,
+                              ManifestError, ShardStore, StoreError,
+                              atomic_write_bytes, checksum, tree_digest)
+from repro.data.graphs import zipf_corpus, zipf_query_stream
+from repro.serve.search import SimilaritySearchServer
+from repro.testing import faults
+
+CFG = SimGNNConfig()
+PARAMS = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+
+N_CORPUS = 12
+SHARD_ROWS = 4                      # -> 3 shards over the test corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return zipf_corpus(3, N_CORPUS)
+
+
+@pytest.fixture(scope="module")
+def query():
+    return next(zipf_query_stream(4, 8, n_corpus=N_CORPUS))["query"]
+
+
+@pytest.fixture(scope="module")
+def indexed(corpus):
+    """One in-memory reference server shared by the read-only tests."""
+    server = SimilaritySearchServer(PARAMS, CFG)
+    server.index(corpus)
+    return server
+
+
+def _saved(tmp_path, indexed):
+    d = str(tmp_path / "index")
+    indexed.save(d, shard_rows=SHARD_ROWS)
+    return d
+
+
+# ------------------------------------------------------- store primitives
+
+def test_store_roundtrip_bit_identical(tmp_path):
+    m = np.arange(40, dtype=np.float32).reshape(10, 4)
+    store = ShardStore(str(tmp_path))
+    man = store.write(m, shard_rows=3, graph_keys=[f"{i:02x}"
+                                                   for i in range(10)])
+    assert man["format_version"] == STORE_FORMAT_VERSION
+    assert [s["shape"][0] for s in man["shards"]] == [3, 3, 3, 1]
+    assert store.verify() == {s["name"]: "ok" for s in man["shards"]}
+    back = np.concatenate([store.read_shard(i) for i in store.shard_infos()])
+    assert back.tobytes() == m.tobytes()
+    # mmap read-back is a real memmap view of the shard file
+    assert isinstance(store.read_shard(store.shard_infos()[0]), np.memmap)
+
+
+def test_store_rewrite_sweeps_dead_shards(tmp_path):
+    store = ShardStore(str(tmp_path))
+    store.write(np.zeros((10, 2), np.float32), shard_rows=2)   # 5 shards
+    store.write(np.ones((4, 2), np.float32), shard_rows=2)     # 2 shards
+    names = sorted(n for n in os.listdir(tmp_path) if n.endswith(".bin"))
+    assert names == ["shard_00000.bin", "shard_00001.bin"]
+    assert all(s == "ok" for s in store.verify().values())
+
+
+def test_atomic_write_leaves_no_tmp(tmp_path):
+    path = str(tmp_path / "blob.bin")
+    atomic_write_bytes(path, b"payload")
+    assert os.listdir(tmp_path) == ["blob.bin"]
+    assert open(path, "rb").read() == b"payload"
+
+
+@pytest.mark.parametrize("mode,status", [
+    ("torn", "corrupt"), ("bitflip", "corrupt"), ("missing", "missing")])
+def test_at_rest_corruption_detected(tmp_path, mode, status):
+    store = ShardStore(str(tmp_path))
+    man = store.write(np.full((6, 3), 7.0, np.float32), shard_rows=6)
+    faults.corrupt_file(str(tmp_path / man["shards"][0]["name"]), mode)
+    assert store.verify() == {man["shards"][0]["name"]: status}
+    with pytest.raises(StoreError):
+        store.read_shard(store.shard_infos()[0])
+
+
+def test_write_seam_torn_shard_detected(tmp_path):
+    with faults.fs_inject("store:shard", "torn", times=1) as plan:
+        store = ShardStore(str(tmp_path))
+        store.write(np.arange(12, dtype=np.float32).reshape(6, 2),
+                    shard_rows=3)
+    assert plan.triggered == 1
+    v = store.verify()
+    assert v["shard_00000.bin"] == "corrupt" and v["shard_00001.bin"] == "ok"
+
+
+def test_write_seam_missing_manifest(tmp_path):
+    with faults.fs_inject("store:manifest", "missing"):
+        ShardStore(str(tmp_path)).write(np.zeros((2, 2), np.float32))
+    with pytest.raises(ManifestError, match="no manifest"):
+        ShardStore(str(tmp_path)).manifest()
+
+
+def test_stale_manifest_version_refused(tmp_path):
+    with faults.fs_inject("store:manifest", "stale"):
+        ShardStore(str(tmp_path)).write(np.zeros((2, 2), np.float32))
+    with pytest.raises(ManifestError, match="format_version"):
+        ShardStore(str(tmp_path)).manifest()
+
+
+def test_garbled_manifest_refused(tmp_path):
+    store = ShardStore(str(tmp_path))
+    store.write(np.zeros((2, 2), np.float32))
+    faults.corrupt_file(str(tmp_path / MANIFEST_NAME), "torn", at_byte=20)
+    with pytest.raises(ManifestError, match="unreadable"):
+        store.manifest()
+
+
+def test_checksum_and_tree_digest_stable():
+    assert checksum(b"abc") == checksum(b"abc")
+    assert checksum(b"abc") != checksum(b"abd")
+    assert tree_digest(PARAMS) == tree_digest(PARAMS)
+    other = init_simgnn_params(jax.random.PRNGKey(1), CFG)
+    assert tree_digest(PARAMS) != tree_digest(other)
+
+
+# --------------------------------------------- surface 1: index save/load
+
+def test_clean_save_load_bit_identical(tmp_path, indexed, corpus, query):
+    """Satellite: restart parity — save -> load in a fresh server ->
+    scores AND topk bit-identical to the original in-memory index."""
+    d = _saved(tmp_path, indexed)
+    fresh = SimilaritySearchServer(PARAMS, CFG)
+    emb = fresh.load(d, corpus)
+    assert emb.tobytes() == indexed.corpus_emb.tobytes()
+    s0, s1 = indexed.scores(query), fresh.scores(query)
+    assert s0.tobytes() == s1.tobytes()
+    i0, v0 = indexed.topk(query, k=5)
+    i1, v1 = fresh.topk(query, k=5)
+    assert (i0 == i1).all() and v0.tobytes() == v1.tobytes()
+    assert fresh.stats.shards_loaded == 3
+    assert fresh.stats.shards_recovered == 0
+    assert fresh.stats.rows_reembedded == 0
+
+
+def test_loaded_index_immune_to_cache_eviction(tmp_path, indexed, corpus,
+                                               query):
+    """Satellite: after reload the resident matrix must survive LRU churn
+    exactly like a built index does — eviction of every corpus entry
+    cannot change served scores."""
+    d = _saved(tmp_path, indexed)
+    fresh = SimilaritySearchServer(PARAMS, CFG)
+    fresh.load(d, corpus)
+    before = fresh.scores(query)
+    fresh.engine.cache.clear()                  # evict EVERYTHING
+    after = fresh.scores(query)
+    assert before.tobytes() == after.tobytes()
+
+
+def test_load_populates_lru_like_index(tmp_path, indexed, corpus):
+    d = _saved(tmp_path, indexed)
+    fresh = SimilaritySearchServer(PARAMS, CFG)
+    fresh.load(d, corpus)
+    from repro.core.cache import graph_key
+    assert all(graph_key(g) in fresh.engine.cache for g in corpus)
+
+
+@pytest.mark.parametrize("mode", ["torn", "bitflip", "missing"])
+def test_index_load_recovers_shard_fault(tmp_path, indexed, corpus, query,
+                                         mode):
+    """Chaos matrix, index-load surface: a damaged shard is detected by
+    checksum/size/existence, ONLY its rows are re-embedded, counters land
+    in health(), and the recovered index serves bit-identical scores."""
+    d = _saved(tmp_path, indexed)
+    faults.corrupt_file(os.path.join(d, "shard_00001.bin"), mode)
+    fresh = SimilaritySearchServer(PARAMS, CFG)
+    emb = fresh.load(d, corpus)
+    assert emb.tobytes() == indexed.corpus_emb.tobytes()
+    assert fresh.scores(query).tobytes() == indexed.scores(query).tobytes()
+    assert fresh.stats.shards_loaded == 2
+    assert fresh.stats.shards_recovered == 1
+    assert fresh.stats.rows_reembedded == SHARD_ROWS
+    h = fresh.health()
+    assert h["shards_recovered"] == 1
+    status = "missing" if mode == "missing" else "corrupt"
+    assert h["counters"][f"store_shard_{status}"] == 1
+    assert h["counters"]["store_rows_reembedded"] == SHARD_ROWS
+
+
+def test_index_load_recovers_every_shard_lost(tmp_path, indexed, corpus,
+                                              query):
+    """All shards gone: load() still answers (it re-embeds everything) but
+    the full rebuild is COUNTED, never silent."""
+    d = _saved(tmp_path, indexed)
+    for i in range(3):
+        faults.corrupt_file(os.path.join(d, f"shard_{i:05d}.bin"), "missing")
+    fresh = SimilaritySearchServer(PARAMS, CFG)
+    emb = fresh.load(d, corpus)
+    assert emb.tobytes() == indexed.corpus_emb.tobytes()
+    assert fresh.stats.shards_recovered == 3
+    assert fresh.stats.rows_reembedded == N_CORPUS
+
+
+def test_index_load_stale_manifest_structured_error(tmp_path, indexed,
+                                                    corpus):
+    """Chaos matrix, index-load surface, stale manifest: the directory as
+    a whole is untrustworthy -> structured ManifestError, and the server
+    keeps its previous state (no partial adoption)."""
+    d = _saved(tmp_path, indexed)
+    faults.corrupt_file(os.path.join(d, MANIFEST_NAME), "stale")
+    fresh = SimilaritySearchServer(PARAMS, CFG)
+    with pytest.raises(ManifestError, match="format_version"):
+        fresh.load(d, corpus)
+    assert fresh.corpus_emb is None and fresh.corpus == []
+
+
+def test_index_load_wrong_params_refused(tmp_path, indexed, corpus):
+    """An index built by different model params must never serve: the
+    embeddings would be finite, plausible, and wrong for every query."""
+    d = _saved(tmp_path, indexed)
+    other = init_simgnn_params(jax.random.PRNGKey(9), CFG)
+    with pytest.raises(StoreError, match="different model"):
+        SimilaritySearchServer(other, CFG).load(d, corpus)
+
+
+def test_index_load_wrong_corpus_size_refused(tmp_path, indexed, corpus):
+    d = _saved(tmp_path, indexed)
+    with pytest.raises(StoreError, match="corpus"):
+        SimilaritySearchServer(PARAMS, CFG).load(d, corpus[:-1])
+
+
+def test_index_load_key_mismatch_reembeds(tmp_path, indexed, corpus):
+    """A shard whose recorded graph_keys disagree with the corpus rows it
+    claims (corpus drifted under the index) is re-embedded from the real
+    graphs, not served stale."""
+    d = _saved(tmp_path, indexed)
+    swapped = list(corpus)
+    swapped[0], swapped[1] = swapped[1], swapped[0]   # rows 0/1: shard 0
+    fresh = SimilaritySearchServer(PARAMS, CFG)
+    emb = fresh.load(d, swapped)
+    assert fresh.stats.shards_recovered == 1
+    assert fresh.engine.counters["store_shard_key_mismatch"] == 1
+    # Recovered rows reflect the REAL corpus order, not the stale shard.
+    ref = SimilaritySearchServer(PARAMS, CFG)
+    ref.index(swapped)
+    assert emb.tobytes() == ref.corpus_emb.tobytes()
+
+
+def test_save_requires_index():
+    with pytest.raises(ValueError, match="no corpus indexed"):
+        SimilaritySearchServer(PARAMS, CFG).save("/nonexistent-unused")
+
+
+# --------------------------------------------- surface 2: train resume
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (4, 8)),
+            "step": jax.numpy.asarray(seed, jax.numpy.int32)}
+
+
+def _ckpt_chain(tmp_path, steps=(10, 20, 30)):
+    d = str(tmp_path / "ckpt")
+    for s in steps:
+        ckpt.save(d, s, _tree(s))
+    return d
+
+
+CKPT_FAULTS = [
+    ("torn", "arrays.0.npz"), ("bitflip", "arrays.0.npz"),
+    ("missing", "arrays.0.npz"), ("torn", "manifest.msgpack"),
+    ("stale", "manifest.msgpack"), ("missing", "manifest.msgpack")]
+
+
+@pytest.mark.parametrize("mode,victim", CKPT_FAULTS)
+def test_resume_walks_back_past_corrupt_newest(tmp_path, mode, victim):
+    """Chaos matrix, train-resume surface: every fault mode on the newest
+    checkpoint makes latest_valid_step fall back to the previous complete-
+    and-valid one, and verified restore() refuses the corrupt step."""
+    d = _ckpt_chain(tmp_path)
+    faults.corrupt_file(os.path.join(d, "step_000000030", victim), mode)
+    best, skipped = ckpt.latest_valid_step(d)
+    assert best == 20
+    assert [s for s, _ in skipped] == [30]
+    assert skipped[0][1]                       # structured problem strings
+    if victim.startswith("arrays") or mode != "missing":
+        with pytest.raises(ckpt.CheckpointCorrupt):
+            ckpt.restore(d, 30, _tree(30))
+    restored = ckpt.restore(d, best, _tree(20))
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(_tree(20)["w"]))
+
+
+def test_resume_walks_back_two_rungs(tmp_path):
+    d = _ckpt_chain(tmp_path)
+    faults.corrupt_file(os.path.join(d, "step_000000030", "arrays.0.npz"),
+                        "bitflip")
+    faults.corrupt_file(os.path.join(d, "step_000000020",
+                                     "manifest.msgpack"), "torn")
+    best, skipped = ckpt.latest_valid_step(d)
+    assert best == 10 and sorted(s for s, _ in skipped) == [20, 30]
+
+
+def test_resume_all_corrupt_reports_none(tmp_path):
+    d = _ckpt_chain(tmp_path, steps=(10,))
+    faults.corrupt_file(os.path.join(d, "step_000000010", "arrays.0.npz"),
+                        "torn")
+    best, skipped = ckpt.latest_valid_step(d)
+    assert best is None and [s for s, _ in skipped] == [10]
+
+
+def test_write_seam_stale_ckpt_manifest(tmp_path):
+    """The stale fault through the WRITE seam (a replica on newer code
+    wrote the checkpoint): verification refuses it."""
+    d = str(tmp_path)
+    with faults.fs_inject("ckpt:manifest", "stale"):
+        ckpt.save(d, 5, _tree())
+    assert any("format_version" in p for p in ckpt.verify_step(d, 5))
+    assert ckpt.latest_valid_step(d) == (None, [(5, ckpt.verify_step(d, 5))])
+
+
+def test_write_seam_torn_ckpt_arrays(tmp_path):
+    d = str(tmp_path)
+    with faults.fs_inject("ckpt:arrays", "torn") as plan:
+        ckpt.save(d, 5, _tree())
+    assert plan.triggered == 1
+    assert any("checksum mismatch" in p for p in ckpt.verify_step(d, 5))
+
+
+def test_loop_resumes_through_walkback(tmp_path):
+    """End to end: train/loop.run with resume="auto" restores the newest
+    VALID checkpoint when the newest one is torn, reports the skip via
+    on_resume, and continues training from there."""
+    from repro.train import loop
+
+    def step_fn(params, opt_state, batch):
+        params = {"x": params["x"] + batch}
+        return params, opt_state, {"loss": jax.numpy.asarray(0.0)}
+
+    d = str(tmp_path / "run")
+    p0 = {"x": jax.numpy.zeros(())}
+    # 6 steps, checkpoint every 2 -> steps 2, 4, 6 on disk
+    loop.run(step_fn, p0, {}, lambda s: jax.numpy.asarray(1.0), n_steps=6,
+             ckpt_dir=d, ckpt_every=2, resume=None, log_every=100)
+    faults.corrupt_file(os.path.join(d, "step_000000006", "arrays.0.npz"),
+                        "bitflip")
+    seen = {}
+
+    def on_resume(step, skipped):
+        seen["step"], seen["skipped"] = step, [s for s, _ in skipped]
+
+    params, _, _ = loop.run(
+        step_fn, p0, {}, lambda s: jax.numpy.asarray(1.0), n_steps=8,
+        ckpt_dir=d, ckpt_every=2, resume="auto", log_every=100,
+        on_resume=on_resume)
+    assert seen == {"step": 4, "skipped": [6]}
+    # resumed at 4, ran 4 more steps of +1
+    assert float(np.asarray(params["x"])) == 8.0
+
+
+def test_loop_fresh_start_when_everything_corrupt(tmp_path):
+    from repro.train import loop
+
+    def step_fn(params, opt_state, batch):
+        return {"x": params["x"] + 1.0}, opt_state, {
+            "loss": jax.numpy.asarray(0.0)}
+
+    d = str(tmp_path / "run")
+    loop.run(step_fn, {"x": jax.numpy.zeros(())}, {},
+             lambda s: None, n_steps=2, ckpt_dir=d, ckpt_every=2,
+             resume=None, log_every=100)
+    faults.corrupt_file(os.path.join(d, "step_000000002", "arrays.0.npz"),
+                        "torn")
+    params, _, _ = loop.run(
+        step_fn, {"x": jax.numpy.zeros(())}, {}, lambda s: None, n_steps=3,
+        ckpt_dir=d, ckpt_every=50, resume="auto", log_every=100)
+    assert float(np.asarray(params["x"])) == 3.0   # started from 0
+
+
+# ----------------------------------------------------------- seam hygiene
+
+def test_fs_hook_disarms_on_exit(tmp_path):
+    from repro.core import store as store_mod
+
+    with faults.fs_inject("store:shard", "torn"):
+        assert store_mod._FS_HOOK is not None
+    assert store_mod._FS_HOOK is None
+    # nested blocks: outer stays armed until the last exits
+    with faults.fs_inject("store:shard", "torn"):
+        with faults.fs_inject("store:manifest", "missing"):
+            assert store_mod._FS_HOOK is not None
+        assert store_mod._FS_HOOK is not None
+    assert store_mod._FS_HOOK is None
+
+
+def test_fs_inject_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown filesystem fault"):
+        with faults.fs_inject("store:shard", "gamma-ray"):
+            pass
+
+
+def test_stale_mode_only_for_manifests(tmp_path):
+    with pytest.raises(ValueError, match="manifest sites"):
+        with faults.fs_inject("store:shard", "stale"):
+            ShardStore(str(tmp_path)).write(np.zeros((2, 2), np.float32))
