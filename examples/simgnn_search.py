@@ -13,9 +13,18 @@ top-k queries from the Zipf-skewed stream — each query pays one embedding
 plus the fused NTN+FCN head over the corpus, and the report shows the
 cache hit rate and per-stage time split.
 
+`--mode two_stage` (with `--topk`) serves through the blocked streaming
+top-M prefilter + exact rerank instead of the full scan (DESIGN.md §14);
+`--topm` sets the shortlist size M. The report adds the per-stage
+prefilter/gather/rerank split, the calibration ladder's chosen proxy,
+and the sampled recall vs the exact scan (every 4th query is also served
+exactly and the top-k overlap recorded).
+
     PYTHONPATH=src python examples/simgnn_search.py --queries 2000 --batch 256
     PYTHONPATH=src python examples/simgnn_search.py --kernels --path auto
     PYTHONPATH=src python examples/simgnn_search.py --topk 5 --corpus 256
+    PYTHONPATH=src python examples/simgnn_search.py --topk 5 --corpus 4096 \
+        --mode two_stage --topm 64
 """
 
 import argparse
@@ -48,6 +57,12 @@ def main():
                          "queries through the embedding cache (§10)")
     ap.add_argument("--corpus", type=int, default=256,
                     help="corpus size for --topk mode")
+    ap.add_argument("--mode", default="exact",
+                    choices=("exact", "two_stage"),
+                    help="--topk query path: exact full-head scan, or the "
+                         "blocked top-M prefilter + exact rerank (§14)")
+    ap.add_argument("--topm", type=int, default=64,
+                    help="two_stage shortlist size M (clamped to corpus)")
     ap.add_argument("--index-dir", default=None,
                     help="persist/reload the corpus index here (§13): "
                          "loads the verified shard store if present "
@@ -93,11 +108,16 @@ def main():
 
 def run_topk(params, args):
     """1-vs-N similarity search through the embedding cache (§10), with
-    optional durable-index persist/reload (§13)."""
+    optional durable-index persist/reload (§13) and the two-stage
+    prefilter+rerank query path (§14)."""
     from repro.core.store import StoreError
 
-    server = SimilaritySearchServer(params, CFG,
-                                    embed_with_kernels=args.kernels)
+    two_stage = args.mode == "two_stage"
+    server = SimilaritySearchServer(
+        params, CFG, embed_with_kernels=args.kernels,
+        # Sampled recall: every 4th two-stage query is ALSO served
+        # exactly and the top-k overlap recorded on stats (§14).
+        recall_sample_every=4 if two_stage else 0)
     corpus = zipf_corpus(seed=1, n_corpus=args.corpus,
                          avg_degree=args.avg_degree)
     loaded = False
@@ -127,25 +147,44 @@ def run_topk(params, args):
                                n_corpus=args.corpus,
                                avg_degree=args.avg_degree)
     n_queries = max(1, args.queries // args.batch)
-    server.topk(next(stream)["query"], k=args.topk)   # compile warmup
+    kw = ({"mode": "two_stage", "prefilter_m": args.topm}
+          if two_stage else {})
+    server.topk(next(stream)["query"], k=args.topk, **kw)  # compile warmup
     t0 = time.time()
     last = None
     for _ in range(n_queries):
-        last = server.topk(next(stream)["query"], k=args.topk)
+        last = server.topk(next(stream)["query"], k=args.topk, **kw)
     dt = time.time() - t0
     st = server.stats
     pairs_s = st.pairs_scored / dt if dt else float("inf")
-    print(f"served {n_queries} top-{args.topk} queries vs corpus of "
-          f"{args.corpus} in {dt:.2f}s -> {n_queries / dt:,.1f} query/s "
-          f"({pairs_s:,.0f} pair-scores/s)")
-    busy = st.embed_seconds + st.head_seconds + st.topk_seconds
-    if busy:
-        # Corpus embeddings are served from the resident index matrix, so
-        # the LRU hit rate only moves when clients repeat query graphs.
-        print(f"stage split: embed {st.embed_seconds / busy:.0%}, "
-              f"head {st.head_seconds / busy:.0%}, "
-              f"topk {st.topk_seconds / busy:.0%}; "
-              f"repeated-query hit rate {server.hit_rate:.0%}")
+    print(f"served {n_queries} {args.mode} top-{args.topk} queries vs "
+          f"corpus of {args.corpus} in {dt:.2f}s -> "
+          f"{n_queries / dt:,.1f} query/s ({pairs_s:,.0f} pair-scores/s)")
+    if two_stage:
+        pf = server.health()["prefilter"]
+        busy = (st.embed_seconds + st.prefilter_seconds + st.gather_seconds
+                + st.rerank_seconds + st.topk_seconds)
+        if busy:
+            print(f"stage split: embed {st.embed_seconds / busy:.0%}, "
+                  f"prefilter {st.prefilter_seconds / busy:.0%}, "
+                  f"gather {st.gather_seconds / busy:.0%}, "
+                  f"rerank {st.rerank_seconds / busy:.0%}, "
+                  f"topk {st.topk_seconds / busy:.0%} "
+                  f"(M={args.topm}, block {pf['block_cols']}, "
+                  f"proxy {pf['proxy']})")
+        if st.recall_samples:
+            print(f"sampled recall vs exact: {st.recall_mean:.4f} over "
+                  f"{st.recall_samples} samples "
+                  f"({st.prefilter_degraded} degraded to exact)")
+    else:
+        busy = st.embed_seconds + st.head_seconds + st.topk_seconds
+        if busy:
+            # Corpus embeddings are served from the resident index matrix,
+            # so the LRU hit rate only moves when clients repeat queries.
+            print(f"stage split: embed {st.embed_seconds / busy:.0%}, "
+                  f"head {st.head_seconds / busy:.0%}, "
+                  f"topk {st.topk_seconds / busy:.0%}; "
+                  f"repeated-query hit rate {server.hit_rate:.0%}")
     idx, scores = last
     print("top results: " + ", ".join(
         f"#{i}={s:.3f}" for i, s in zip(idx, scores)))

@@ -110,6 +110,31 @@ def graph_key(g: dict, *, wl_iters: int = WL_ITERS) -> bytes:
     return k
 
 
+def graph_fingerprint(g: dict) -> tuple:
+    """Cheap structural fingerprint guarding `graph_key` collisions.
+
+    `(n_nodes, n_edges, labels-digest)` — computable without WL refinement,
+    memoized on the dict as `"_graph_fp"` (same immutability contract as
+    the key memo). Two 1-WL-equivalent graphs get identical *embeddings*
+    from this model family, so a WL collision is harmless by construction;
+    this fingerprint exists for the failure mode the WL argument does NOT
+    cover — a 64-bit mixing collision between structurally different
+    graphs, where serving the cached row would be silently wrong.
+    """
+    fp = g.get("_graph_fp")
+    if fp is not None:
+        return fp
+    adj = np.asarray(g["adj"])
+    labels = np.asarray(g["labels"], np.int64)
+    fp = (int(adj.shape[0]), int(np.count_nonzero(adj)) // 2,
+          _digest(np.sort(labels).tobytes()))
+    try:
+        g["_graph_fp"] = fp
+    except TypeError:            # immutable mapping: just skip the memo
+        pass
+    return fp
+
+
 class EmbeddingCache:
     """LRU of per-graph `[F]` embeddings keyed by `graph_key`.
 
@@ -118,16 +143,25 @@ class EmbeddingCache:
     uses them so inspecting a plan cannot reorder the cache. Stored arrays
     are returned as-is (callers must not mutate them; the engine stores
     read-only numpy copies).
+
+    Collision guard: `put`/`get` accept an optional `graph_fingerprint`.
+    When both the stored and the presented fingerprint exist and disagree,
+    the key has COLLIDED across structurally different graphs — the entry
+    is evicted and the lookup misses (`key_collisions` counts it, surfaced
+    through `stats()` and `engine.health()`); a wrong embedding is never
+    served. Fingerprint-less calls behave exactly as before.
     """
 
     def __init__(self, capacity: int = 4096):
         if capacity < 0:
             raise ValueError(f"capacity must be >= 0, got {capacity}")
         self.capacity = capacity
-        self._store: OrderedDict[bytes, np.ndarray] = OrderedDict()
+        self._store: OrderedDict[bytes, tuple[np.ndarray,
+                                              tuple | None]] = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.key_collisions = 0
 
     def __len__(self) -> int:
         return len(self._store)
@@ -137,25 +171,42 @@ class EmbeddingCache:
 
     def peek(self, key: bytes) -> np.ndarray | None:
         """Recency- and stats-neutral lookup (the planner's view)."""
-        return self._store.get(key)
+        entry = self._store.get(key)
+        return entry[0] if entry is not None else None
 
-    def get(self, key: bytes) -> np.ndarray | None:
-        emb = self._store.get(key)
-        if emb is None:
+    def get(self, key: bytes,
+            fingerprint: tuple | None = None) -> np.ndarray | None:
+        entry = self._store.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        emb, fp = entry
+        if (fingerprint is not None and fp is not None
+                and fp != fingerprint):
+            # WL-key collision between different structures: never serve
+            # the wrong row — evict and report a miss so the caller
+            # re-embeds (and re-puts under its own fingerprint).
+            self.key_collisions += 1
+            del self._store[key]
             self.misses += 1
             return None
         self._store.move_to_end(key)
         self.hits += 1
         return emb
 
-    def put(self, key: bytes, emb: np.ndarray) -> None:
+    def put(self, key: bytes, emb: np.ndarray,
+            fingerprint: tuple | None = None) -> None:
         if self.capacity == 0:
             return
-        if key in self._store:
+        prev = self._store.get(key)
+        if prev is not None:
+            if (fingerprint is not None and prev[1] is not None
+                    and prev[1] != fingerprint):
+                self.key_collisions += 1
             self._store.move_to_end(key)
-            self._store[key] = emb
+            self._store[key] = (emb, fingerprint)
             return
-        self._store[key] = emb
+        self._store[key] = (emb, fingerprint)
         while len(self._store) > self.capacity:
             self._store.popitem(last=False)
             self.evictions += 1
@@ -172,4 +223,5 @@ class EmbeddingCache:
         return {"capacity": self.capacity, "size": len(self._store),
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
+                "key_collisions": self.key_collisions,
                 "hit_rate": round(self.hit_rate, 4)}

@@ -66,7 +66,7 @@ from typing import Callable, Sequence
 import jax
 import numpy as np
 
-from repro.core.cache import EmbeddingCache, graph_key
+from repro.core.cache import EmbeddingCache, graph_fingerprint, graph_key
 from repro.core.health import CircuitBreaker
 from repro.core.validate import GraphValidationError, validate_pairs
 
@@ -187,6 +187,9 @@ class ScorePlan:
     quarantined: tuple = ()
     degraded_from: tuple = ()
     attempts: int = 1
+    #: two-stage retrieval (DESIGN.md §14): the top-M shortlist size the
+    #: prefilter scan used before the exact rerank (0 = no prefilter ran).
+    prefilter_m: int = 0
 
 
 class ScoringEngine:
@@ -941,11 +944,14 @@ class ScoringEngine:
             keys = [graph_key(g) for g in graphs]
         # One LRU access per *unique* key: duplicates within a call are one
         # logical lookup (hit/miss counters stay per-graph, not per-slot).
+        # Lookups carry the structural fingerprint so a WL-key collision
+        # evicts-and-misses instead of serving another graph's row.
         seen: dict[bytes, np.ndarray | None] = {}
         misses: "OrderedDict[bytes, list[int]]" = OrderedDict()
         for i, k in enumerate(keys):
-            emb = seen[k] if k in seen else seen.setdefault(
-                k, self.cache.get(k))
+            if k not in seen:
+                seen[k] = self.cache.get(k, graph_fingerprint(graphs[i]))
+            emb = seen[k]
             if emb is not None:
                 out[i] = emb
             else:
@@ -988,12 +994,54 @@ class ScoringEngine:
                     for k, _ in items:
                         out[misses[k]] = np.nan
                     continue
-            for (k, _), emb in zip(items, hg):
+            for (k, g), emb in zip(items, hg):
                 emb = emb.copy()
                 emb.setflags(write=False)
-                self.cache.put(k, emb)
+                self.cache.put(k, emb, graph_fingerprint(g))
                 out[misses[k]] = emb
         return out
+
+    def prefilter_topm(self, qv, corpus_emb, m: int, *,
+                       block_cols: int | None = None,
+                       ntn_operands: tuple | None = None
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """Blocked streaming top-M prefilter scan (DESIGN.md §14).
+
+        The first stage of a two-stage query: shortlist `m` corpus rows per
+        query without ever materializing the [Q, N] score matrix. With
+        `ntn_operands=(uq, dq)` (from `kernels.retrieval.collapse_query_ntn`)
+        the scan runs the exact streamed NTN+FCN proxy; otherwise `qv` is
+        dotted against the corpus directly (raw or calibrated vectors).
+        Routed through the §12 fault seam (site "prefilter") so chaos tests
+        and real kernel failures surface here — callers degrade to the
+        exact full scan and the counters record it. Raises on any failure;
+        corrupt output (non-finite scores from finite inputs, out-of-range
+        indices) is promoted to `NonFiniteOutput` rather than served.
+        """
+        from repro.kernels import retrieval
+
+        self.counters["prefilter_calls"] += 1
+        try:
+            if ntn_operands is not None:
+                uq, dq = ntn_operands
+                s, i = _call("prefilter", lambda: retrieval.blocked_topm_ntn(
+                    uq, dq, corpus_emb, self.params["fcn"], m,
+                    block_cols=block_cols))
+            else:
+                s, i = _call("prefilter", lambda: retrieval.blocked_topm(
+                    qv, corpus_emb, m, block_cols=block_cols))
+            s, i = np.asarray(s, np.float32), np.asarray(i)
+            n = np.asarray(corpus_emb).shape[0]
+            if i.size and not ((i >= 0) & (i < n)).all():
+                raise NonFiniteOutput(
+                    "prefilter returned out-of-range candidate indices")
+            if s.size and np.isnan(s).any():
+                raise NonFiniteOutput("prefilter returned NaN scores")
+        except Exception:
+            self.counters["errors:prefilter"] += 1
+            raise
+        self.counters["prefilter_queries"] += len(np.asarray(qv))
+        return s, i
 
     def _embed_fallback(self) -> Callable:
         """Pure-jnp reference embedder used as the per-bucket retry when the

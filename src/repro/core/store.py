@@ -55,6 +55,14 @@ import numpy as np
 STORE_FORMAT_VERSION = 1
 MANIFEST_NAME = "manifest.json"
 
+#: Rows per shard for the similarity-search index (DESIGN.md §13/§14).
+#: Doubles as the retrieval prefilter's column-block size so the streaming
+#: top-M scan's sequential block loop walks the corpus in 1:1
+#: correspondence with the persisted shards — the partition unit a later
+#: multi-process sharded server distributes. Keep it a power of two no
+#: larger than `kernels.retrieval.RETRIEVAL_MAX_BLOCK_COLS`.
+DEFAULT_SHARD_ROWS = 256
+
 
 class StoreError(RuntimeError):
     """Base class for durable-state failures (structured, never silent)."""

@@ -35,6 +35,9 @@ from repro.kernels.flash_attn import flash_attention
 from repro.kernels.fused_gcn import fused_gcn_att
 from repro.kernels.fused_pair import fused_pair_score
 from repro.kernels.packed_pair import packed_pair_score
+from repro.kernels.retrieval import (blocked_topm, blocked_topm_ntn,
+                                     collapse_query_ntn,
+                                     retrieval_block_cols)
 from repro.kernels.simgnn_head import simgnn_head
 from repro.kernels.sparse_pair import sparse_pair_score
 from repro.kernels.wkv6 import wkv6
@@ -43,7 +46,9 @@ __all__ = ["flash_attention", "wkv6", "graph_embeddings_fused",
            "pair_scores_fused", "simgnn_pair_score_kernel",
            "pair_score_megakernel", "megakernel_block_pairs",
            "pair_score_packed", "packed_node_budget", "packed_tile_block",
-           "pair_score_sparse", "packed_edge_budget", "sparse_tile_block"]
+           "pair_score_sparse", "packed_edge_budget", "sparse_tile_block",
+           "blocked_topm", "blocked_topm_ntn", "collapse_query_ntn",
+           "retrieval_block_cols"]
 
 
 def _pad_batch(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:

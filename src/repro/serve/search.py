@@ -22,8 +22,13 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.cache import graph_key
-from repro.core.engine import ScoringEngine
-from repro.core.store import ShardStore, StoreError, tree_digest
+from repro.core.engine import ScorePlan, ScoringEngine, WorkloadStats
+from repro.core.store import (DEFAULT_SHARD_ROWS, ShardStore, StoreError,
+                              tree_digest)
+from repro.kernels.retrieval import (collapse_query_ntn,
+                                     fit_prefilter_calibration,
+                                     prefilter_query_vectors,
+                                     retrieval_block_cols, topm_reference)
 
 
 @dataclass
@@ -41,10 +46,26 @@ class SearchStats:
     shards_recovered: int = 0      # shards that failed verification and
                                    # were selectively re-embedded
     rows_reembedded: int = 0       # corpus rows recomputed during load()
+    prefilter_queries: int = 0     # queries served through the two-stage
+                                   # blocked top-M scan (DESIGN.md §14)
+    prefilter_degraded: int = 0    # two-stage queries that fell back to the
+                                   # exact full scan on prefilter failure
+    recall_samples: int = 0        # two-stage queries also run exact for
+                                   # online recall measurement
+    recall_sum: float = 0.0        # summed sampled recall@k (mean = sum/n)
     embed_seconds: float = 0.0     # query-side embedding (+ any corpus misses)
-    head_seconds: float = 0.0      # NTN+FCN over the corpus
+    head_seconds: float = 0.0      # NTN+FCN over the corpus (exact scans)
+    prefilter_seconds: float = 0.0  # blocked top-M scan (+ proxy collapse)
+    gather_seconds: float = 0.0    # host-side survivor row gather
+    rerank_seconds: float = 0.0    # exact NTN+FCN head over the M survivors
+    calibrate_seconds: float = 0.0  # one-off proxy calibration per index
     topk_seconds: float = 0.0      # host-side partial sort
     cache: dict = field(default_factory=dict)
+
+    @property
+    def recall_mean(self) -> float:
+        return (self.recall_sum / self.recall_samples
+                if self.recall_samples else float("nan"))
 
     def as_dict(self) -> dict:
         return {"queries": self.queries, "pairs_scored": self.pairs_scored,
@@ -53,8 +74,17 @@ class SearchStats:
                 "shards_loaded": self.shards_loaded,
                 "shards_recovered": self.shards_recovered,
                 "rows_reembedded": self.rows_reembedded,
+                "prefilter_queries": self.prefilter_queries,
+                "prefilter_degraded": self.prefilter_degraded,
+                "recall_samples": self.recall_samples,
+                "recall_mean": round(self.recall_mean, 4)
+                if self.recall_samples else None,
                 "embed_seconds": round(self.embed_seconds, 6),
                 "head_seconds": round(self.head_seconds, 6),
+                "prefilter_seconds": round(self.prefilter_seconds, 6),
+                "gather_seconds": round(self.gather_seconds, 6),
+                "rerank_seconds": round(self.rerank_seconds, 6),
+                "calibrate_seconds": round(self.calibrate_seconds, 6),
                 "topk_seconds": round(self.topk_seconds, 6),
                 **{f"cache_{k}": v for k, v in self.cache.items()}}
 
@@ -70,14 +100,29 @@ class SimilaritySearchServer:
     and partial-sorts the scores host-side.
     """
 
+    #: sampled two-stage recall below this at calibration time escalates
+    #: the proxy from the collapsed linear fit to the exact streamed
+    #: NTN+FCN scan (DESIGN.md §14).
+    PREFILTER_TARGET_RECALL = 0.99
+
     def __init__(self, params, cfg, *, cache_size: int = 4096,
-                 embed_with_kernels: bool = False):
+                 embed_with_kernels: bool = False,
+                 shard_rows: int = DEFAULT_SHARD_ROWS,
+                 recall_sample_every: int = 0):
         self.engine = ScoringEngine(params, cfg, path="embedding_cache",
                                     cache_size=cache_size,
                                     embed_with_kernels=embed_with_kernels)
         self.corpus: list[dict] = []
         self.corpus_emb: np.ndarray | None = None
         self.stats = SearchStats()
+        #: persisted-shard size; also the prefilter's column-block unit so
+        #: the streaming scan walks the corpus shard-by-shard (§14).
+        self.shard_rows = int(shard_rows)
+        #: 0 disables online recall sampling; N>0 runs every Nth two-stage
+        #: query through the exact path too and records recall@k on stats.
+        self.recall_sample_every = int(recall_sample_every)
+        self._calib: dict | None = None
+        self._two_stage_queries = 0
 
     # -------------------------------------------------------------- indexing
 
@@ -91,6 +136,7 @@ class SimilaritySearchServer:
         t0 = time.perf_counter()
         self.corpus = list(corpus)
         self.corpus_emb = self.engine.embed_graphs(self.corpus)
+        self._calib = None             # proxy must recalibrate per index
         self.stats.embed_seconds += time.perf_counter() - t0
         self.stats.index_size = len(self.corpus)
         # Survive a failed corpus shard (DESIGN.md §12): the engine already
@@ -105,7 +151,7 @@ class SimilaritySearchServer:
 
     # ------------------------------------------------------------ durability
 
-    def save(self, directory: str, *, shard_rows: int = 256) -> dict:
+    def save(self, directory: str, *, shard_rows: int | None = None) -> dict:
         """Persist the resident index (DESIGN.md §13): the `[N, F]` matrix
         in checksummed row shards plus a versioned manifest recording the
         WL `graph_key` of every row and a digest of the model params —
@@ -116,7 +162,7 @@ class SimilaritySearchServer:
         keys = [graph_key(g).hex() for g in self.corpus]
         return ShardStore(directory).write(
             np.ascontiguousarray(self.corpus_emb, np.float32),
-            shard_rows=shard_rows, graph_keys=keys,
+            shard_rows=shard_rows or self.shard_rows, graph_keys=keys,
             meta={"kind": "similarity_index",
                   "params_digest": tree_digest(self.engine.params),
                   "n_graphs": len(self.corpus),
@@ -153,8 +199,11 @@ class SimilaritySearchServer:
         corpus = list(corpus)
         row = 0
         loaded = recovered = reembedded = 0
+        first_shard_rows = None
         for info in store.shard_infos(man):
             rows = info.shape[0]
+            if first_shard_rows is None:
+                first_shard_rows = rows
             status = store.verify_shard(info)
             if status == "ok" and info.graph_keys:
                 actual = [graph_key(corpus[i]).hex()
@@ -178,6 +227,11 @@ class SimilaritySearchServer:
                              f"shape[0]={n}")
         self.corpus = corpus
         self.corpus_emb = out
+        self._calib = None
+        if first_shard_rows:
+            # Adopt the persisted shard size as the prefilter block unit so
+            # the streaming scan stays 1:1 with the on-disk shards (§14).
+            self.shard_rows = first_shard_rows
         self.stats.index_size = n
         self.stats.shards_loaded += loaded
         self.stats.shards_recovered += recovered
@@ -200,21 +254,67 @@ class SimilaritySearchServer:
 
     # -------------------------------------------------------------- querying
 
-    def topk(self, query: dict, k: int = 10) -> tuple[np.ndarray, np.ndarray]:
-        """Score `query` against the whole corpus; returns (indices, scores)
-        of the k most similar corpus graphs, scores descending."""
+    def topk(self, query: dict, k: int = 10, *, mode: str = "exact",
+             prefilter_m: int = 64) -> tuple[np.ndarray, np.ndarray]:
+        """Score `query` against the corpus; returns (indices, scores) of
+        the k most similar corpus graphs, scores descending.
+
+        mode="exact" runs the full NTN+FCN head over all N corpus rows;
+        mode="two_stage" shortlists `prefilter_m` candidates with the
+        blocked streaming top-M proxy scan first, then reranks only the
+        survivors through the exact head (DESIGN.md §14) — identical
+        ranking whenever the shortlist contains the true top-k, and
+        bit-identical to exact when `prefilter_m >= N`. k is clamped to
+        the corpus size (k >= N returns all N ranked); `prefilter_m` is
+        raised to k when k is larger, so the shortlist always covers the
+        requested depth."""
+        return self.search([query], k, mode=mode,
+                           prefilter_m=prefilter_m)[0]
+
+    def search(self, queries: list[dict], k: int = 10, *,
+               mode: str = "exact", prefilter_m: int = 64) -> list[tuple]:
+        """Batched search: [(indices, scores), ...] per query. In
+        two_stage mode the prefilter scans ALL queries in one blocked
+        kernel launch and the rerank batches every survivor into one head
+        call — the per-query cost amortizes with the batch."""
+        if mode not in ("exact", "two_stage"):
+            raise ValueError(f"mode must be 'exact' or 'two_stage', "
+                             f"got {mode!r}")
+        if not queries:
+            return []
+        if mode == "exact":
+            return [self._exact_topk(q, k) for q in queries]
+        return self._two_stage_search(queries, k, prefilter_m)
+
+    def _exact_topk(self, query: dict, k: int) -> tuple:
         scores = self.scores(query)
         t0 = time.perf_counter()
-        k = min(k, len(scores))
-        # Rank on a NaN->-inf copy: argpartition on `-scores` would float
-        # NaN entries (failed corpus embeddings) INTO the top-k, silently
-        # displacing real results. Returned scores keep their NaN so a
-        # caller that does see one knows it is a failure, not a similarity.
-        rank = np.where(np.isfinite(scores), scores, -np.inf)
-        top = np.argpartition(-rank, k - 1)[:k]
-        top = top[np.argsort(-rank[top], kind="stable")]
+        top, s = self._rank(scores, k)
         self.stats.topk_seconds += time.perf_counter() - t0
-        return top, scores[top]
+        return top, s
+
+    @staticmethod
+    def _rank(scores: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """Top-k of a score vector, NaN-safe and k-clamped.
+
+        Ranks on a NaN->-inf copy: argpartition on `-scores` would float
+        NaN entries (failed corpus embeddings) INTO the top-k, silently
+        displacing real results. Returned scores keep their NaN so a
+        caller that does see one knows it is a failure, not a similarity.
+        k is clamped to [0, N]; k >= N returns the full stable descending
+        order (an all-NaN vector ranks in ascending index order), so
+        oversized k never crashes the partial sort."""
+        n = len(scores)
+        k = max(0, min(int(k), n))
+        if k == 0:
+            return np.empty(0, np.int64), scores[:0]
+        rank = np.where(np.isfinite(scores), scores, -np.inf)
+        if k >= n:
+            top = np.argsort(-rank, kind="stable")
+        else:
+            top = np.argpartition(-rank, k - 1)[:k]
+            top = top[np.argsort(-rank[top], kind="stable")]
+        return top.astype(np.int64), scores[top]
 
     def scores(self, query: dict) -> np.ndarray:
         """Full `[N]` similarity vector of `query` vs the indexed corpus."""
@@ -233,21 +333,176 @@ class SimilaritySearchServer:
         self.stats.cache = self.engine.cache.stats()
         return out
 
-    def search(self, queries: list[dict], k: int = 10) -> list[tuple]:
-        """Batched convenience wrapper: [(indices, scores), ...] per query."""
-        return [self.topk(q, k) for q in queries]
+    # ------------------------------------------------- two-stage retrieval
+
+    def _two_stage_search(self, queries: list[dict], k: int,
+                          prefilter_m: int) -> list[tuple]:
+        """Blocked top-M prefilter over all queries at once, then one
+        batched exact rerank of the survivors (DESIGN.md §14)."""
+        if self.corpus_emb is None:
+            raise ValueError("no corpus indexed; call index(corpus) first")
+        n = len(self.corpus)
+        # The shortlist must cover the requested k (a top-99 query through
+        # a 4-wide shortlist could never return 99 rows), clamped to N.
+        m = max(1, min(max(int(prefilter_m), min(int(k), n)), n))
+        nq = len(queries)
+        t0 = time.perf_counter()
+        hq = self.engine.embed_graphs(queries)
+        t1 = time.perf_counter()
+        self.stats.embed_seconds += t1 - t0
+        calib = self._calibration()
+        block = retrieval_block_cols(n, shard_rows=self.shard_rows)
+        try:
+            if calib["proxy"] == "linear":
+                qv = prefilter_query_vectors(
+                    self.engine.params["ntn"]["w"], hq, calib)
+                _, pidx = self.engine.prefilter_topm(
+                    qv, self.corpus_emb, m, block_cols=block)
+            else:                                  # exact streamed NTN+FCN
+                ntn_ops = collapse_query_ntn(self.engine.params["ntn"], hq)
+                _, pidx = self.engine.prefilter_topm(
+                    hq, self.corpus_emb, m, block_cols=block,
+                    ntn_operands=ntn_ops)
+        except Exception:
+            # Degradation rung (§12/§14): a failing prefilter kernel must
+            # not fail the query — serve it through the exact full scan
+            # (query embeds are already cached, so only the head re-runs)
+            # and count the degradation for health()/dashboards.
+            self.engine.counters["prefilter_degraded"] += nq
+            self.stats.prefilter_degraded += nq
+            return [self._exact_topk(q, k) for q in queries]
+        t2 = time.perf_counter()
+        self.stats.prefilter_seconds += t2 - t1
+        # Ascending survivor order: sequential row gather AND the same tie
+        # order as the exact path's stable sort — with m == N this makes
+        # the rerank input literally the corpus matrix, so scores and
+        # ranking come out bit-identical to mode="exact".
+        pidx = np.sort(pidx, axis=1)
+        h2 = self.corpus_emb[pidx.reshape(-1)]
+        h1 = np.repeat(hq, m, axis=0)
+        t3 = time.perf_counter()
+        self.stats.gather_seconds += t3 - t2
+        s = self.engine.pair_scores_from_embeddings(h1, h2).reshape(nq, m)
+        t4 = time.perf_counter()
+        self.stats.rerank_seconds += t4 - t3
+        results = []
+        for qi in range(nq):
+            loc, sc = self._rank(s[qi], k)
+            results.append((pidx[qi][loc].astype(np.int64), sc))
+        self.stats.topk_seconds += time.perf_counter() - t4
+        self.stats.queries += nq
+        self.stats.pairs_scored += nq * m
+        self.stats.prefilter_queries += nq
+        self.stats.cache = self.engine.cache.stats()
+        self.engine.last_plan = ScorePlan(
+            path="embedding_cache", fallback="embedding_cache",
+            fit_idx=np.arange(nq), over_idx=np.empty(0, np.int64),
+            stats=WorkloadStats(n_pairs=nq * m),
+            reason=f"two-stage retrieval: {calib['proxy']} prefilter "
+                   f"top-{m} of {n} (block {block}), exact rerank",
+            prefilter_m=m)
+        self._sample_recall(queries, k, results)
+        return results
+
+    def _sample_recall(self, queries: list[dict], k: int,
+                       results: list[tuple]) -> None:
+        """Online recall measurement: every `recall_sample_every`-th
+        two-stage query is ALSO served exactly and the overlap of the two
+        top-k sets recorded on `stats` (§14 observability). Sampling cost
+        shows up in the exact-path stage timers like any exact query."""
+        every = self.recall_sample_every
+        for qi, query in enumerate(queries):
+            self._two_stage_queries += 1
+            if not every or (self._two_stage_queries % every):
+                continue
+            exact_idx, _ = self._exact_topk(query, k)
+            got, want = set(results[qi][0].tolist()), exact_idx.tolist()
+            recall = (sum(t in got for t in want) / len(want)
+                      if want else 1.0)
+            self.stats.recall_samples += 1
+            self.stats.recall_sum += recall
+            self.engine.counters["prefilter_recall_samples"] += 1
+
+    def _calibration(self) -> dict:
+        """Fit + validate the prefilter proxy for the current index (once
+        per `index()`/`load()`; DESIGN.md §14).
+
+        Fits the collapsed linear proxy against exact head scores on a
+        sampled corpus sub-matrix, measures its recall@10 there, and keeps
+        it only if it meets `PREFILTER_TARGET_RECALL`; otherwise escalates
+        to the exact streamed NTN+FCN scan (recall 1.0 by construction, at
+        K matmul slices per block instead of one). The chosen proxy, fit
+        quality and measured recalls are recorded for `health()`."""
+        if self._calib is not None:
+            return self._calib
+        t0 = time.perf_counter()
+        emb = self.corpus_emb
+        finite = np.flatnonzero(np.isfinite(emb).all(axis=1))
+        ntn = self.engine.params["ntn"]
+        calib: dict = {"proxy": "ntn_exact", "r2": None,
+                       "recall_linear": None,
+                       "target_recall": self.PREFILTER_TARGET_RECALL}
+        # Validation slice: exact scores for a few pseudo-queries against a
+        # bounded corpus sample — index-time cost stays O(1) in N.
+        nq = min(8, len(finite))
+        nv = min(2048, len(finite))
+        if nq >= 2:
+            rng = np.random.default_rng(0x5EED ^ len(emb))
+            qi = rng.choice(finite, nq, replace=False)
+            vi = (finite if nv == len(finite)
+                  else rng.choice(finite, nv, replace=False))
+            h1 = np.repeat(emb[qi], nv, axis=0)
+            h2 = np.tile(emb[vi], (nq, 1))
+            y = self.engine.pair_scores_from_embeddings(h1, h2)
+            exact = y.reshape(nq, nv)
+            kk = min(10, nv)
+            true_k = np.argsort(-np.where(np.isfinite(exact), exact,
+                                          -np.inf),
+                                axis=1, kind="stable")[:, :kk]
+            try:
+                fit = fit_prefilter_calibration(ntn["w"], h1, h2, y)
+                qv = prefilter_query_vectors(ntn["w"], emb[qi], fit)
+                mm = min(64, nv)
+                _, cand = topm_reference(qv, emb[vi], mm)
+                rec = sum(t in set(row.tolist())
+                          for row, tk in zip(cand, true_k)
+                          for t in tk) / (nq * kk)
+                calib.update(fit, recall_linear=round(rec, 4))
+                if rec >= self.PREFILTER_TARGET_RECALL:
+                    calib["proxy"] = "linear"
+            except (np.linalg.LinAlgError, ValueError):
+                pass                       # degenerate sample: stay exact
+        self._calib = calib
+        self.stats.calibrate_seconds += time.perf_counter() - t0
+        self.engine.counters["prefilter_calibrations"] += 1
+        self.engine.counters[f"prefilter_proxy:{calib['proxy']}"] += 1
+        return calib
 
     def health(self) -> dict:
         """Engine fault-tolerance state plus the server's own view of the
         index (DESIGN.md §12/§13) — one call for dashboards/tests. The
         durable-state counters (`store_*`, `ckpt_*`) ride inside the
         engine's counter dict."""
+        calib = self._calib or {}
         return {**self.engine.health(),
                 "index_size": self.stats.index_size,
                 "failed_embeddings": self.stats.failed_embeddings,
                 "shards_loaded": self.stats.shards_loaded,
                 "shards_recovered": self.stats.shards_recovered,
-                "rows_reembedded": self.stats.rows_reembedded}
+                "rows_reembedded": self.stats.rows_reembedded,
+                "prefilter": {
+                    "proxy": calib.get("proxy"),
+                    "r2": calib.get("r2"),
+                    "recall_linear": calib.get("recall_linear"),
+                    "target_recall": calib.get("target_recall"),
+                    "queries": self.stats.prefilter_queries,
+                    "degraded": self.stats.prefilter_degraded,
+                    "recall_samples": self.stats.recall_samples,
+                    "recall_mean": (round(self.stats.recall_mean, 4)
+                                    if self.stats.recall_samples else None),
+                    "block_cols": (retrieval_block_cols(
+                        len(self.corpus), shard_rows=self.shard_rows)
+                        if self.corpus else None)}}
 
     @property
     def hit_rate(self) -> float:

@@ -18,6 +18,8 @@ Sites are the engine's execution points:
     "embed_fallback"       — the reference retry of a failed embed bucket
     "head"                 — the fused NTN+FCN head
     "head_fallback"        — the reference retry of a failed head call
+    "prefilter"            — the blocked top-M retrieval scan (two-stage
+                             search degrades to the exact full scan, §14)
     "train:packed_sparse" | "train:packed_dense" | "train:reference"
                            — loss_and_grad executor calls
 

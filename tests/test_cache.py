@@ -9,7 +9,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core.cache import EmbeddingCache, graph_key
+from repro.core.cache import EmbeddingCache, graph_fingerprint, graph_key
 from repro.core.engine import ScoringEngine
 from repro.core.simgnn import SimGNNConfig, init_simgnn_params
 from repro.data.graphs import edit_graph, random_graph, zipf_corpus
@@ -233,3 +233,89 @@ def test_search_server_index_survives_lru_eviction():
     assert emb.shape == (8, CFG.gcn_dims[-1])
     idx, _ = srv.topk(random_graph(np.random.default_rng(25), 16), k=3)
     assert len(idx) == 3                     # evictions never break serving
+
+
+# ------------------------------------------------------ WL-collision guard
+
+def test_graph_fingerprint_permutation_invariant_and_memoized():
+    rng = np.random.default_rng(30)
+    for g in _graphs(30, 6):
+        perm = rng.permutation(g["adj"].shape[0])
+        permuted = {"adj": g["adj"][perm][:, perm],
+                    "labels": g["labels"][perm]}
+        assert graph_fingerprint(g) == graph_fingerprint(permuted)
+    g = _strip(_graphs(31, 1)[0])
+    assert "_graph_fp" not in g
+    fp = graph_fingerprint(g)
+    assert g["_graph_fp"] == fp and graph_fingerprint(g) == fp
+    n, edges, _ = fp
+    assert n == g["adj"].shape[0]
+    assert edges == int(np.count_nonzero(g["adj"])) // 2
+
+
+def test_fingerprint_distinguishes_structural_differences():
+    g = _strip(_graphs(32, 1)[0])
+    relabeled = _strip(g)
+    relabeled["labels"][0] = (relabeled["labels"][0] + 1) % CFG.n_node_labels
+    assert graph_fingerprint(g) != graph_fingerprint(relabeled)
+    deedged = _strip(g)
+    r, c = np.nonzero(np.triu(deedged["adj"], 1))
+    deedged["adj"][r[0], c[0]] = deedged["adj"][c[0], r[0]] = 0.0
+    assert graph_fingerprint(g) != graph_fingerprint(deedged)
+
+
+def test_collision_guard_evicts_and_misses_on_get():
+    cache = EmbeddingCache(capacity=4)
+    emb = np.zeros(3, np.float32)
+    cache.put(b"k", emb, fingerprint=(5, 4, b"x"))
+    assert cache.get(b"k", fingerprint=(5, 4, b"x")) is emb   # match: hit
+    assert cache.key_collisions == 0
+    # A DIFFERENT structure hashing to the same key must never be served
+    # the stored row: evict + miss so the caller re-embeds.
+    assert cache.get(b"k", fingerprint=(6, 7, b"y")) is None
+    assert cache.key_collisions == 1
+    assert b"k" not in cache                  # entry evicted, not kept
+    assert cache.misses == 1 and cache.hits == 1
+    other = np.ones(3, np.float32)
+    cache.put(b"k", other, fingerprint=(6, 7, b"y"))
+    assert cache.get(b"k", fingerprint=(6, 7, b"y")) is other
+    assert cache.stats()["key_collisions"] == 1
+
+
+def test_collision_guard_counts_on_put_overwrite():
+    cache = EmbeddingCache(capacity=4)
+    cache.put(b"k", np.zeros(2), fingerprint=(3, 2, b"a"))
+    newer = np.ones(2)
+    cache.put(b"k", newer, fingerprint=(9, 9, b"b"))   # colliding overwrite
+    assert cache.key_collisions == 1
+    # Last writer wins under ITS fingerprint (the overwrite is the fix).
+    assert cache.get(b"k", fingerprint=(9, 9, b"b")) is newer
+
+
+def test_fingerprintless_calls_stay_backward_compatible():
+    cache = EmbeddingCache(capacity=4)
+    emb = np.zeros(2)
+    cache.put(b"k", emb)                      # no fingerprint recorded
+    assert cache.get(b"k") is emb             # none presented: plain hit
+    assert cache.get(b"k", fingerprint=(1, 1, b"z")) is emb   # stored None
+    cache.put(b"k", emb, fingerprint=(1, 1, b"z"))            # upgrades fp
+    assert cache.get(b"k") is emb             # none presented again: hit
+    assert cache.key_collisions == 0
+
+
+def test_engine_embeds_guarded_and_collisions_in_health():
+    gs = _graphs(33, 3)
+    eng = ScoringEngine(PARAMS, CFG, path="embedding_cache")
+    eng.embed_graphs(gs)
+    k = graph_key(gs[0])
+    # The engine stored gs[0] under its real fingerprint; present a graph
+    # forced to the SAME key but a different structure (simulated 64-bit
+    # mixing collision) and the guard must evict rather than serve.
+    impostor = _strip(gs[1])
+    impostor["_graph_key"] = k
+    out = eng.embed_graphs([impostor])
+    ref = ScoringEngine(PARAMS, CFG, path="reference").embed_graphs(
+        [_strip(gs[1])])
+    np.testing.assert_allclose(out, ref, rtol=0, atol=1e-6)
+    health = eng.health()
+    assert health["cache"]["key_collisions"] >= 1

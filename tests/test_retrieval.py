@@ -1,0 +1,306 @@
+"""Two-stage retrieval correctness (kernels/retrieval.py, the engine's
+prefilter seam, serve/search.py two_stage path — DESIGN.md §14): blocked
+streaming top-M scan parity vs dense references, the
+never-materialize-[Q, N] block guard, shard-aligned block sizing, NaN-row
+exclusion, the query-side NTN collapse algebra, calibration fit recovery,
+M=N bit-parity with the exact scan, recall monotonicity in M, fault-seam
+degradation to exact, and the top-k k-clamp regressions.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.simgnn import (SimGNNConfig, fcn_head, init_simgnn_params,
+                               ntn_scores)
+from repro.data.graphs import random_graph, zipf_corpus, zipf_query_stream
+from repro.kernels.retrieval import (NEG_FILL, RETRIEVAL_MAX_BLOCK_COLS,
+                                     blocked_topm, blocked_topm_ntn,
+                                     collapse_query_ntn,
+                                     fit_prefilter_calibration,
+                                     ntn_logit_reference,
+                                     prefilter_query_vectors,
+                                     retrieval_block_cols, topm_reference)
+from repro.serve.search import SimilaritySearchServer
+from repro.testing import faults
+
+CFG = SimGNNConfig()
+PARAMS = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+F = CFG.gcn_dims[-1]
+K = CFG.ntn_k
+
+
+def _emb(rng, n):
+    return rng.standard_normal((n, F)).astype(np.float32)
+
+
+# ------------------------------------------------------------ kernel parity
+
+@pytest.mark.parametrize("m", [1, 10, 137, 200])
+def test_blocked_topm_matches_reference(m):
+    rng = np.random.default_rng(0)
+    qv, corpus = _emb(rng, 5), _emb(rng, 137)   # N not a block multiple
+    s, i = blocked_topm(qv, corpus, m, block_cols=32)
+    rs, ri = topm_reference(qv, corpus, m)
+    np.testing.assert_array_equal(i, ri)
+    np.testing.assert_allclose(s, rs, rtol=0, atol=1e-5)
+    assert s.shape == i.shape == (5, min(m, 137))
+    assert np.all(np.diff(s, axis=1) <= 0)      # rows descending
+
+
+def test_blocked_topm_nan_rows_rank_last_never_pad():
+    rng = np.random.default_rng(1)
+    qv, corpus = _emb(rng, 3), _emb(rng, 40)
+    corpus[[4, 17, 31]] = np.nan                # dropped embed rows (§12)
+    s, i = blocked_topm(qv, corpus, 40, block_cols=16)
+    rs, ri = topm_reference(qv, corpus, 40)
+    np.testing.assert_array_equal(i, ri)
+    # NaN rows surface LAST with the finite sentinel — never as NaN, never
+    # displaced by -inf init placeholders or padded corpus columns.
+    assert np.isfinite(s).all()
+    np.testing.assert_array_equal(np.sort(i[:, -3:], axis=1),
+                                  [[4, 17, 31]] * 3)
+    np.testing.assert_allclose(s[:, -3:], NEG_FILL)
+    # With m below the finite count, no NaN row makes the shortlist.
+    _, i10 = blocked_topm(qv, corpus, 10, block_cols=16)
+    assert not np.isin(i10, [4, 17, 31]).any()
+
+
+def test_blocked_topm_all_nan_corpus_stays_finite():
+    rng = np.random.default_rng(2)
+    qv = _emb(rng, 2)
+    corpus = np.full((12, F), np.nan, np.float32)
+    s, i = blocked_topm(qv, corpus, 4, block_cols=8)
+    np.testing.assert_allclose(s, NEG_FILL)
+    # Ties resolve to the ascending corpus index (the stable-sort order).
+    np.testing.assert_array_equal(i, [[0, 1, 2, 3]] * 2)
+
+
+def test_blocked_topm_ntn_matches_reference_and_exact_head():
+    rng = np.random.default_rng(3)
+    hq, corpus = _emb(rng, 4), _emb(rng, 100)
+    uq, dq = collapse_query_ntn(PARAMS["ntn"], hq)
+    s, i = blocked_topm_ntn(uq, dq, corpus, PARAMS["fcn"], 100,
+                            block_cols=32)
+    rs, ri = ntn_logit_reference(uq, dq, corpus, PARAMS["fcn"], 100)
+    np.testing.assert_array_equal(i, ri)
+    np.testing.assert_allclose(s, rs, rtol=0, atol=1e-4)
+    # The streamed logit ranking IS the exact pairwise head's ranking
+    # (sigmoid is monotone): exact prefilter by construction.
+    h1 = np.repeat(hq, 100, axis=0)
+    h2 = np.tile(corpus, (4, 1))
+    exact = np.asarray(fcn_head(PARAMS["fcn"], ntn_scores(
+        PARAMS["ntn"], h1, h2))).reshape(4, 100)
+    np.testing.assert_array_equal(
+        i, np.argsort(-exact.astype(np.float32), axis=1, kind="stable"))
+
+
+def test_collapse_query_ntn_algebra():
+    """uq·h_c + dq reproduces the NTN pre-activations exactly (the §14
+    per-query fold: pay K·F² once, then K·F per candidate)."""
+    rng = np.random.default_rng(4)
+    hq, hc = _emb(rng, 6), _emb(rng, 6)
+    uq, dq = collapse_query_ntn(PARAMS["ntn"], hq)
+    folded = np.maximum(
+        np.einsum("qkf,qf->qk", uq.reshape(6, K, F), hc) + dq, 0.0)
+    ref = np.asarray(ntn_scores(PARAMS["ntn"], hq, hc))
+    np.testing.assert_allclose(folded, ref, rtol=0, atol=1e-5)
+
+
+# ----------------------------------------------------- block guard / sizing
+
+def test_block_guard_rejects_materializing_widths():
+    rng = np.random.default_rng(5)
+    qv, corpus = _emb(rng, 2), _emb(rng, 4096)
+    with pytest.raises(ValueError, match="materializes"):
+        blocked_topm(qv, corpus, 8, block_cols=4096)
+    uq, dq = collapse_query_ntn(PARAMS["ntn"], qv)
+    with pytest.raises(ValueError, match="materializes"):
+        blocked_topm_ntn(uq, dq, corpus, PARAMS["fcn"], 8, block_cols=2048)
+
+
+def test_retrieval_block_cols_aligns_with_shards():
+    # Store-backed: the block IS the persisted shard when it fits...
+    assert retrieval_block_cols(100_000, shard_rows=256) == 256
+    assert retrieval_block_cols(512, shard_rows=1024) == 1024
+    # ...and oversized shards halve until they fit, still nesting evenly.
+    b = retrieval_block_cols(1 << 20, shard_rows=8192)
+    assert b <= RETRIEVAL_MAX_BLOCK_COLS and 8192 % b == 0
+    # Store-less: corpus rounded up to a power of two, capped.
+    assert retrieval_block_cols(300) == 512
+    assert retrieval_block_cols(3) == 8
+    assert retrieval_block_cols(1 << 20) == RETRIEVAL_MAX_BLOCK_COLS
+    with pytest.raises(ValueError, match=">= 1"):
+        retrieval_block_cols(0)
+
+
+def test_scan_shape_validation_and_empty():
+    rng = np.random.default_rng(6)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        blocked_topm(_emb(rng, 2), rng.standard_normal((4, F + 1)), 2)
+    with pytest.raises(ValueError, match="not \\[Q, K\\*F\\]"):
+        blocked_topm_ntn(np.zeros((2, 7)), np.zeros((2, K)),
+                         _emb(rng, 4), PARAMS["fcn"], 2)
+    s, i = blocked_topm(np.zeros((0, F)), _emb(rng, 4), 2)
+    assert s.shape == i.shape == (0, 0)
+
+
+# -------------------------------------------------------------- calibration
+
+def test_calibration_recovers_linear_model():
+    """When the head IS the linear feature model, the ridge fit recovers
+    it and the calibrated query vectors rank candidates exactly."""
+    rng = np.random.default_rng(7)
+    w = np.asarray(PARAMS["ntn"]["w"])
+    hq, hc = _emb(rng, 64), _emb(rng, 64)
+    alpha = rng.standard_normal(K).astype(np.float32)
+    beta = rng.standard_normal(F).astype(np.float32)
+    phi = np.einsum("qf,kfg,qg->qk", hq, w, hc)
+    logits = phi @ alpha + hc @ beta
+    y = 1.0 / (1.0 + np.exp(-logits))
+    calib = fit_prefilter_calibration(w, hq, hc, y)
+    assert calib["r2"] > 0.99 and calib["n_samples"] == 64
+    # One query against a candidate set: qv·hc equals the true logit up
+    # to the fit's per-query constant, so the ranking matches exactly.
+    # One query against a candidate set: qv·hc tracks the true logit up
+    # to ridge shrinkage and a per-query constant — near-ties may swap,
+    # but the top-10 SET must be recovered exactly (recall@10 == 1.0,
+    # the metric the serving ladder gates on).
+    qv = prefilter_query_vectors(w, hq[:1], calib)
+    cand = hc
+    true_logit = (np.einsum("f,kfg,ng->nk", hq[0], w, cand) @ alpha
+                  + cand @ beta)
+    _, i = topm_reference(qv, cand, 10)
+    want = np.argsort(-true_logit.astype(np.float32), kind="stable")[:10]
+    assert set(i[0].tolist()) == set(want.tolist())
+
+
+def test_calibration_needs_enough_finite_samples():
+    rng = np.random.default_rng(8)
+    w = np.asarray(PARAMS["ntn"]["w"])
+    hq, hc = _emb(rng, K + 4), _emb(rng, K + 4)
+    y = rng.uniform(0.1, 0.9, K + 4)
+    y[: 8] = np.nan                           # finite filter drops these
+    with pytest.raises(ValueError, match="finite calibration pairs"):
+        fit_prefilter_calibration(w, hq, hc, y)
+
+
+# ------------------------------------------------------- server: two-stage
+
+def _server(seed, n_corpus, **kw):
+    srv = SimilaritySearchServer(PARAMS, CFG, **kw)
+    srv.index(zipf_corpus(seed, n_corpus))
+    return srv
+
+
+def _queries(seed, n):
+    stream = zipf_query_stream(seed, 2, n_corpus=16)
+    return [next(stream)["query"] for _ in range(n)]
+
+
+def test_two_stage_m_equals_n_bit_identical():
+    srv = _server(40, 48)
+    for q in _queries(41, 3):
+        ei, es = srv.topk(q, k=10, mode="exact")
+        ti, ts = srv.topk(q, k=10, mode="two_stage", prefilter_m=48)
+        np.testing.assert_array_equal(ei, ti)
+        assert np.asarray(es).tobytes() == np.asarray(ts).tobytes()
+
+
+def test_two_stage_recall_monotone_in_m():
+    """Shortlists are nested in M, so any true top-k hit at M stays a hit
+    at M' > M: recall@k must be monotone non-decreasing, reaching 1.0 at
+    M = N."""
+    srv = _server(42, 96)
+    queries = _queries(43, 4)
+    exact = srv.search(queries, k=10, mode="exact")
+    last = -1.0
+    for m in (4, 8, 16, 32, 96):
+        got = srv.search(queries, k=10, mode="two_stage", prefilter_m=m)
+        rec = float(np.mean([
+            len(set(g[0].tolist()) & set(e[0].tolist())) / len(e[0])
+            for g, e in zip(got, exact)]))
+        assert rec >= last - 1e-12, f"recall dropped at M={m}"
+        last = rec
+    assert last == 1.0                        # M = N: the full corpus
+
+
+def test_two_stage_batch_equals_single():
+    srv = _server(44, 64)
+    queries = _queries(45, 3)
+    batched = srv.search(queries, k=5, mode="two_stage", prefilter_m=16)
+    for q, (bi, bs) in zip(queries, batched):
+        si, ss = srv.search([q], k=5, mode="two_stage", prefilter_m=16)[0]
+        np.testing.assert_array_equal(bi, si)
+        assert np.asarray(bs).tobytes() == np.asarray(ss).tobytes()
+
+
+def test_two_stage_plan_stats_and_health():
+    srv = _server(46, 64, recall_sample_every=2)
+    queries = _queries(47, 4)
+    srv.search(queries, k=5, mode="two_stage", prefilter_m=16)
+    plan = srv.engine.last_plan
+    assert plan.prefilter_m == 16
+    assert "two-stage retrieval" in plan.reason
+    assert srv.stats.prefilter_queries == 4
+    assert srv.stats.pairs_scored >= 4 * 16
+    assert srv.engine.counters["prefilter_calls"] >= 1
+    assert srv.engine.counters["prefilter_queries"] >= 4
+    pf = srv.health()["prefilter"]
+    assert pf["proxy"] in ("linear", "ntn_exact")
+    assert pf["queries"] == 4 and pf["degraded"] == 0
+    # recall_sample_every=2 served half the queries exactly as well and
+    # recorded the top-k overlap.
+    assert srv.stats.recall_samples == 2
+    assert srv.stats.recall_mean == 1.0       # exact proxy or tiny corpus
+    with pytest.raises(ValueError, match="mode"):
+        srv.search(queries, k=5, mode="fuzzy")
+
+
+@pytest.mark.parametrize("mode", ["raise", "nan"])
+def test_prefilter_fault_degrades_to_exact(mode):
+    srv = _server(48, 48)
+    queries = _queries(49, 3)
+    exact = srv.search(queries, k=5, mode="exact")
+    with faults.inject("prefilter", mode=mode) as plan:
+        got = srv.search(queries, k=5, mode="two_stage", prefilter_m=8)
+    assert plan.triggered >= 1
+    # Degraded queries are served through the exact full scan — same
+    # results, and the degradation is counted for health()/dashboards.
+    for (gi, gs), (ei, es) in zip(got, exact):
+        np.testing.assert_array_equal(gi, ei)
+        np.testing.assert_array_equal(gs, es)
+    assert srv.stats.prefilter_degraded == 3
+    assert srv.engine.counters["prefilter_degraded"] == 3
+    assert srv.engine.counters["errors:prefilter"] >= 1
+    assert srv.health()["prefilter"]["degraded"] == 3
+
+
+# --------------------------------------------------------- k-clamp contract
+
+def test_topk_oversized_k_returns_all_ranked():
+    srv = _server(50, 12)
+    for mode in ("exact", "two_stage"):
+        idx, scores = srv.topk(_queries(51, 1)[0], k=40, mode=mode)
+        assert len(idx) == len(scores) == 12      # clamped to N, no crash
+        assert sorted(idx.tolist()) == list(range(12))
+        assert np.all(np.diff(scores) <= 0)
+
+
+def test_topk_k_zero_and_all_nan_corpus():
+    srv = _server(52, 8)
+    q = _queries(53, 1)[0]
+    idx, scores = srv.topk(q, k=0)
+    assert len(idx) == 0 and len(scores) == 0
+    # Every corpus embedding failed (§12 worst case): oversized k still
+    # returns all N in ascending-index order, scores kept NaN so callers
+    # see failure — in BOTH modes (two_stage raises its shortlist to
+    # cover k, and the kernel's NEG_FILL sentinel keeps the NaN corpus
+    # from poisoning the scan).
+    srv.corpus_emb = np.full_like(srv.corpus_emb, np.nan)
+    idx, scores = srv.topk(q, k=99, mode="exact")
+    np.testing.assert_array_equal(idx, np.arange(8))
+    assert np.isnan(scores).all()
+    idx2, scores2 = srv.topk(q, k=99, mode="two_stage", prefilter_m=4)
+    np.testing.assert_array_equal(idx2, np.arange(8))
+    assert np.isnan(scores2).all()
