@@ -25,6 +25,23 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     return times[len(times) // 2]
 
 
+def time_call(fn, *, repeats: int = 2, reduce: str = "min") -> float:
+    """Wall-clock seconds over `repeats` blocking calls of a zero-arg
+    thunk — the replay harness's measurement primitive (DESIGN.md §15).
+    reduce="min" measures *capability* (scheduler noise only ever adds
+    time); reduce="median" matches the central tendency of per-call trace
+    records, which is what a cost model fitted on them predicts."""
+    if reduce not in ("min", "median"):
+        raise ValueError(f"unknown reduce {reduce!r}")
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[0] if reduce == "min" else times[len(times) // 2]
+
+
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 

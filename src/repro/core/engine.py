@@ -53,6 +53,17 @@ persistently broken path during a cool-down. `ScorePlan` records
 `quarantined`/`degraded_from`/`attempts`; `health()` reports breaker states
 and error counters. `repro.testing.faults` drives all of it
 deterministically through the `_FAULT_HOOK` seam below.
+
+Since DESIGN.md §15 the engine also measures itself: every executed work
+item appends a `TraceRecord` (path, shape stats, pack occupancy, wall
+seconds) to `self.recorder` (`core/profile.py` — ring + optional JSONL
+profile), and `plan()` argmins a per-path latency model ridge-fitted from
+that profile whenever every candidate path has `PLANNER_MIN_SUPPORT` clean
+records — the hand-tuned `SPARSE_MAX_DEGREE` / `CACHE_MIN_HIT_FRAC`
+thresholds below remain only as the bit-identical cold-profile fallback.
+`benchmarks/replay.py` re-runs a captured mixed trace and gates
+predicted-vs-measured error, so every future kernel's crossover point is
+regression-tested data rather than folklore.
 """
 
 from __future__ import annotations
@@ -68,6 +79,7 @@ import numpy as np
 
 from repro.core.cache import EmbeddingCache, graph_fingerprint, graph_key
 from repro.core.health import CircuitBreaker
+from repro.core.profile import TraceRecorder, fit_cost_model, trace_features
 from repro.core.validate import GraphValidationError, validate_pairs
 
 PATHS = ("reference", "two_kernel", "bucketed_mega", "packed_dense",
@@ -190,6 +202,10 @@ class ScorePlan:
     #: two-stage retrieval (DESIGN.md §14): the top-M shortlist size the
     #: prefilter scan used before the exact rerank (0 = no prefilter ran).
     prefilter_m: int = 0
+    #: measured-planner estimates (DESIGN.md §15): predicted wall seconds
+    #: per candidate path when the fitted cost model drove this decision;
+    #: empty when the threshold rules did (cold profile / forced path).
+    cost_estimates: dict = field(default_factory=dict)
 
 
 class ScoringEngine:
@@ -221,6 +237,14 @@ class ScoringEngine:
     #: accumulating loss and grads; gradient accumulation then falls out
     #: for free (`accum_steps` just guarantees at least that many chunks).
     TRAIN_TILE_CHUNK = 16
+    #: measured planner (DESIGN.md §15): a candidate path needs at least
+    #: this many clean trace records before the cost model may steer it —
+    #: below it, dispatch stays on the threshold rules above (the "cold"
+    #: fallback, pinned bit-identical by test).
+    PLANNER_MIN_SUPPORT = 8
+    #: refit the cost model after this many new records (fitting is a
+    #: handful of 5x5 solves — cheap, but not per-call cheap).
+    PLANNER_REFIT_EVERY = 32
 
     def __init__(self, params, cfg, *, path: str = "auto",
                  node_budget: int | None = None,
@@ -231,13 +255,18 @@ class ScoringEngine:
                  degrade: bool = True,
                  breaker_threshold: int = 3,
                  breaker_cooldown_s: float = 30.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 recorder: TraceRecorder | None = None,
+                 planner: str = "measured"):
         if path != "auto" and path not in PATHS:
             raise ValueError(f"unknown path {path!r}; expected 'auto' or one "
                              f"of {PATHS}")
         if validation not in ("strict", "lenient", "off"):
             raise ValueError(f"unknown validation mode {validation!r}; "
                              "expected 'strict', 'lenient' or 'off'")
+        if planner not in ("measured", "threshold"):
+            raise ValueError(f"unknown planner mode {planner!r}; expected "
+                             "'measured' or 'threshold'")
         from repro.kernels.ops import packed_node_budget
 
         self.params = params
@@ -294,6 +323,19 @@ class ScoringEngine:
         self._alt_bucket_fns: dict[tuple, Callable] = {}
         self._embed_fallback_fn: Callable | None = None
         self._head_fallback_fn: Callable | None = None
+        # ---- measured planner (DESIGN.md §15) ----
+        #: per-call trace ring (+ optional JSONL persistence) every executed
+        #: work item appends to; pass a `TraceRecorder(path=...)` to persist
+        #: a profile, or a shared recorder so replicas pool their samples.
+        self.recorder = TraceRecorder(clock=clock) if recorder is None \
+            else recorder
+        #: "measured" (default): argmin the fitted per-path cost model when
+        #: every candidate has `PLANNER_MIN_SUPPORT` clean records, else the
+        #: threshold rules; "threshold": always the threshold rules (parity
+        #: harnesses, the replay benchmark's measurement engines).
+        self.planner = planner
+        self._model = None
+        self._model_fit_at = -1
 
     # ------------------------------------------------------------- planning
 
@@ -328,16 +370,26 @@ class ScoringEngine:
             has_labels=has_labels)
 
     def _select(self, stats: WorkloadStats, cache_hit_frac: float = 0.0, *,
-                train: bool = False) -> tuple[str, str]:
+                train: bool = False, n_to_embed: int = 0,
+                keys_known: bool = False) -> tuple[str, str, dict]:
+        """Dispatch decision: (path, reason, cost_estimates).
+
+        Forced paths, empty calls and label-free batches are structural —
+        no model can override them. Otherwise the measured planner
+        (DESIGN.md §15) argmins the fitted per-path latency model when
+        every candidate path has enough clean trace support; a cold or
+        partially-supported profile falls back BIT-IDENTICALLY to the
+        threshold rules in `_select_threshold` (pinned by test).
+        """
         if self.path != "auto":
             if train and self.path not in TRAIN_PATHS:
                 raise ValueError(
                     f"path {self.path!r} has no VJP-capable executor; "
                     f"training dispatch is restricted to {TRAIN_PATHS} "
                     "(DESIGN.md §11)")
-            return self.path, f"forced path={self.path}"
+            return self.path, f"forced path={self.path}", {}
         if stats.n_pairs == 0:
-            return "reference", "empty call"
+            return "reference", "empty call", {}
         if not stats.has_labels:
             # The packed kernels structurally require int labels (W1 row
             # gather); the bucketed megakernel is the dense-feats-capable
@@ -346,7 +398,28 @@ class ScoringEngine:
             # Training has no bucketed executor, so it degrades to the
             # reference (which will state the label contract on execution).
             return (("reference" if train else "bucketed_mega"),
-                    "graphs without int labels cannot take a packed path")
+                    "graphs without int labels cannot take a packed path",
+                    {})
+        est = self._planner_estimates(stats, train=train,
+                                      n_to_embed=n_to_embed,
+                                      keys_known=keys_known)
+        if est is not None:
+            # Deterministic tie-break: predicted cost, then PATHS order.
+            path = min(est, key=lambda p: (est[p], PATHS.index(p)))
+            ms = ", ".join(f"{p}={est[p] * 1e3:.2f}ms"
+                           for p in sorted(est, key=est.get))
+            return (path, f"measured cost model argmin ({ms})", est)
+        path, reason = self._select_threshold(stats, cache_hit_frac,
+                                              train=train)
+        return path, reason, {}
+
+    def _select_threshold(self, stats: WorkloadStats,
+                          cache_hit_frac: float = 0.0, *,
+                          train: bool = False) -> tuple[str, str]:
+        """The hand-tuned threshold rules — the cold-profile fallback the
+        measured planner must reproduce bit-identically when it lacks
+        support (DESIGN.md §15; decision table pinned by
+        tests/test_profile.py and the parity-matrix cold-planner test)."""
         if not train and cache_hit_frac >= self.CACHE_MIN_HIT_FRAC:
             return ("embedding_cache",
                     f"{cache_hit_frac:.0%} of unique graphs have resident "
@@ -364,6 +437,88 @@ class ScoringEngine:
         return ("packed_dense",
                 f"measured avg degree {stats.avg_degree:.2f} > "
                 f"{self.SPARSE_MAX_DEGREE:g}: dense MXU matmul wins")
+
+    # ------------------------------------------ measured planner (§15)
+
+    def _cost_model(self):
+        """The fitted per-path latency model, refit lazily every
+        `PLANNER_REFIT_EVERY` new records (None while the profile is too
+        small for even one path)."""
+        rec = self.recorder
+        if rec is None or rec.total_records < self.PLANNER_MIN_SUPPORT:
+            return self._model
+        if (self._model_fit_at < 0
+                or rec.total_records - self._model_fit_at
+                >= self.PLANNER_REFIT_EVERY):
+            self._model = fit_cost_model(
+                rec.records(), min_support=self.PLANNER_MIN_SUPPORT)
+            self._model_fit_at = rec.total_records
+            self.counters["planner_refits"] += 1
+        return self._model
+
+    def _planner_estimates(self, stats: WorkloadStats, *, train: bool,
+                           n_to_embed: int, keys_known: bool) -> dict | None:
+        """Predicted wall seconds per candidate path, or None when the
+        profile cannot steer this call (planner pinned to thresholds, no
+        model yet, or any candidate below `PLANNER_MIN_SUPPORT` — partial
+        support falls back whole, so the argmin never compares a measured
+        path against an unmeasured one).
+
+        Candidates are the auto-dispatchable executors: the three packed/
+        bucketed scoring paths (plus the embedding-cached path whenever
+        this call hashed keys — the >= 50% residency flip becomes a
+        measured crossover), or `TRAIN_PATHS` under train. The dense
+        reference stays out of the scoring candidate set exactly as it is
+        under the threshold rules: it is the parity anchor and terminal
+        degradation rung, not a latency contender.
+        """
+        if self.planner != "measured":
+            return None
+        model = self._cost_model()
+        if model is None:
+            return None
+        if train:
+            cand = {p: f"train:{p}" for p in TRAIN_PATHS}
+        else:
+            cand = {p: p for p in ("bucketed_mega", "packed_dense",
+                                   "packed_sparse")}
+            if keys_known:
+                cand["embedding_cache"] = "embedding_cache"
+        if not model.supports(cand.values()):
+            return None
+        est = {}
+        for path, key in cand.items():
+            feats = trace_features(
+                stats.n_pairs, stats.mean_nodes, stats.avg_degree,
+                n_to_embed if path == "embedding_cache" else 0)
+            est[path] = model.predict(key, feats)
+        return est
+
+    def _record_trace(self, kind: str, path: str, n_pairs: int,
+                      plan: ScorePlan, wall_s: float, *,
+                      degraded: Sequence[str] = (), attempts: int = 1):
+        """Append one executed work item to the trace ring (DESIGN.md §15).
+        Routed through the §12 fault seam (site "profile") and guarded:
+        a failing recorder must never fail the scoring call it observes."""
+        rec = self.recorder
+        if rec is None:
+            return
+        pstats = self.last_pack_stats or {}
+        occ = (float(pstats.get("occupancy_lhs", 0.0)
+                     + pstats.get("occupancy_rhs", 0.0)) / 2.0
+               if pstats else 0.0)
+        try:
+            _call("profile", lambda: rec.record(
+                kind=kind, path=path, n_pairs=int(n_pairs),
+                max_nodes=plan.stats.max_nodes,
+                mean_nodes=plan.stats.mean_nodes,
+                avg_degree=plan.stats.avg_degree,
+                density=plan.stats.density, occupancy=occ,
+                to_embed=len(plan.to_embed_idx),
+                degraded_from=list(degraded), attempts=int(attempts),
+                wall_s=float(wall_s)))
+        except Exception:
+            self.counters["profile_record_errors"] += 1
 
     def _graph_keys(self, pairs: Sequence[tuple]) -> tuple:
         """Canonical keys of every graph in the call: all lhs, then all rhs
@@ -422,15 +577,19 @@ class ScoringEngine:
         # reads the cache.
         keys: tuple = ()
         hit_frac = 0.0
+        n_to_embed = 0
         if not train and len(valid) and stats.has_labels \
                 and self.cache.capacity > 0 and (
                 self.path == "embedding_cache"
                 or (self.path == "auto" and len(self.cache))):
             keys = self._graph_keys(valid)
             unique = set(keys)
-            hit_frac = (sum(1 for k in unique if k in self.cache)
-                        / len(unique))
-        path, reason = self._select(stats, hit_frac, train=train)
+            hits = sum(1 for k in unique if k in self.cache)
+            hit_frac = hits / len(unique)
+            n_to_embed = len(unique) - hits
+        path, reason, est = self._select(stats, hit_frac, train=train,
+                                         n_to_embed=n_to_embed,
+                                         keys_known=bool(keys))
         cached_idx = to_embed_idx = np.empty(0, np.int64)
         if path == "embedding_cache" and keys:
             hit = [k in self.cache for k in keys]
@@ -456,7 +615,7 @@ class ScoringEngine:
                          fit_idx=fit_idx, over_idx=over_idx, stats=stats,
                          reason=reason, cached_idx=cached_idx,
                          to_embed_idx=to_embed_idx, graph_keys=keys,
-                         quarantined=quarantined)
+                         quarantined=quarantined, cost_estimates=est)
 
     # ------------------------------------------------------------ execution
 
@@ -589,8 +748,8 @@ class ScoringEngine:
         once half-open, one probe runs. The terminal reference rung has no
         breaker and no finite check — by then NaN means the *model* is
         non-finite, which quarantine cannot rule out and retries cannot fix.
-        Returns (attempts, degraded-rung names); re-raises only if every
-        rung failed.
+        Returns (attempts, degraded-rung names, the rung that served);
+        re-raises only if every rung failed.
         """
         rungs = (start,) + (DEGRADE_LADDER.get(start, ())
                             if self.degrade else ())
@@ -614,7 +773,7 @@ class ScoringEngine:
                         "inputs")
                 if br is not None:
                     br.record_success()
-                return attempts, degraded
+                return attempts, degraded, rung
             except Exception as exc:
                 if br is not None:
                     br.record_failure()
@@ -627,15 +786,28 @@ class ScoringEngine:
             f"no executable rung for {start} (ladder exhausted)")
 
     def health(self) -> dict:
-        """Inspectable fault-tolerance state (DESIGN.md §12): breaker
-        snapshots keyed by path and shape class, error/degradation/
-        quarantine counters, and the embedding-LRU counters."""
+        """Inspectable fault-tolerance + planner state (DESIGN.md §12/§15):
+        breaker snapshots keyed by path and shape class, error/degradation/
+        quarantine counters, the embedding-LRU counters, and the measured
+        planner (profile size, fitted model support + residuals)."""
+        rec = self.recorder
+        planner: dict = {"mode": self.planner,
+                         "enabled": self._model is not None
+                         and bool(self._model.weights)}
+        if rec is not None:
+            planner.update(records=rec.total_records,
+                           records_dropped=int(
+                               rec.counters["records_dropped"]),
+                           record_errors=int(rec.counters["record_errors"]))
+        if self._model is not None:
+            planner["model"] = self._model.snapshot()
         return {
             "breakers": {
                 f"{path}[pairs<={b},nodes<={n}]": br.snapshot()
                 for (path, (b, n)), br in sorted(self.breakers.items())},
             "counters": dict(self.counters),
             "cache": self.cache.stats(),
+            "planner": planner,
         }
 
     # -------------------------------------------------------- training path
@@ -783,7 +955,7 @@ class ScoringEngine:
         rungs that emit non-finite loss/grads for finite targets fail like
         crashes; the reference rung serves whatever it computes (a NaN
         there is the model's, and `train.step` skips the update).
-        Returns (sse, grads, attempts, degraded)."""
+        Returns (sse, grads, attempts, degraded, the rung that served)."""
         rungs = (start,) + (TRAIN_DEGRADE_LADDER.get(start, ())
                             if self.degrade else ())
         sc = self._shape_class(plan.stats)
@@ -811,7 +983,7 @@ class ScoringEngine:
                         "finite targets")
                 if br is not None:
                     br.record_success()
-                return s, g, attempts, degraded
+                return s, g, attempts, degraded, rung
             except Exception as exc:
                 if br is not None:
                     br.record_failure()
@@ -885,9 +1057,13 @@ class ScoringEngine:
                            ("reference", plan.over_idx)):
             if not len(idx):
                 continue
-            s, g, a, d = self._run_train_ladder(
+            t0 = self._clock()
+            s, g, a, d, rung = self._run_train_ladder(
                 start, params, [pairs[i] for i in idx], targets[idx],
                 plan, accum_steps)
+            jax.block_until_ready(g)
+            self._record_trace("train", f"train:{rung}", len(idx), plan,
+                               self._clock() - t0, degraded=d, attempts=a)
             sse = sse + s
             grads = jax.tree.map(jnp.add, grads, g)
             attempts += a
@@ -1150,8 +1326,12 @@ class ScoringEngine:
                                (plan.fallback, plan.over_idx)):
                 if not len(idx):
                     continue
-                a, d = self._run_score_ladder(
+                t0 = self._clock()
+                a, d, rung = self._run_score_ladder(
                     start, [pairs[i] for i in idx], idx, out, plan)
+                self._record_trace("score", rung, len(idx), plan,
+                                   self._clock() - t0, degraded=d,
+                                   attempts=a)
                 attempts += a
                 degraded.extend(d)
             self.last_plan = replace(plan, degraded_from=tuple(degraded),

@@ -201,7 +201,9 @@ class MicroBatcher:
 def simgnn_query_server(params, cfg, *, use_kernels: bool = False,
                         packing: bool = True, node_budget: int | None = None,
                         path: str | None = None, cache_size: int = 4096,
-                        validation: str = "lenient"):
+                        validation: str = "lenient",
+                        clock: Callable[[], float] = time.perf_counter,
+                        recorder=None):
     """Returns score_fn(list[(g1, g2)]) -> np.ndarray of similarity scores.
 
     A thin wrapper over `core.engine.ScoringEngine` (DESIGN.md §9) — no path
@@ -217,6 +219,11 @@ def simgnn_query_server(params, cfg, *, use_kernels: bool = False,
     `serve.search.SimilaritySearchServer.index` does) — after which auto
     dispatch serves recurring graphs embedding-free; plain `score()` calls
     on the non-cached paths never write it.
+
+    `clock`/`recorder` are forwarded to the engine: the injectable clock
+    stamps its trace records and breaker cool-downs deterministically under
+    test, and an external `core.profile.TraceRecorder` lets a caller share
+    one persisted profile across servers (DESIGN.md §15).
 
     `validation` is forwarded to the engine (DESIGN.md §12): the default
     "lenient" quarantines malformed request graphs per pair (NaN score in
@@ -235,7 +242,8 @@ def simgnn_query_server(params, cfg, *, use_kernels: bool = False,
         path = (("auto" if packing else "bucketed_mega") if use_kernels
                 else "reference")
     engine = ScoringEngine(params, cfg, path=path, node_budget=node_budget,
-                           cache_size=cache_size, validation=validation)
+                           cache_size=cache_size, validation=validation,
+                           clock=clock, recorder=recorder)
 
     def score(pairs):
         out = engine.score(pairs)

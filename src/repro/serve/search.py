@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from typing import Callable
 
 import numpy as np
 
@@ -108,10 +109,18 @@ class SimilaritySearchServer:
     def __init__(self, params, cfg, *, cache_size: int = 4096,
                  embed_with_kernels: bool = False,
                  shard_rows: int = DEFAULT_SHARD_ROWS,
-                 recall_sample_every: int = 0):
+                 recall_sample_every: int = 0,
+                 clock: Callable[[], float] = time.perf_counter,
+                 recorder=None):
+        #: injectable timing source for every per-stage SearchStats timer
+        #: (mirrors `CircuitBreaker`/`MicroBatcher`): tests drive
+        #: deterministic stage seconds with a fake clock, no sleeps. The
+        #: same clock feeds the engine (breaker cool-downs, trace records).
+        self._clock = clock
         self.engine = ScoringEngine(params, cfg, path="embedding_cache",
                                     cache_size=cache_size,
-                                    embed_with_kernels=embed_with_kernels)
+                                    embed_with_kernels=embed_with_kernels,
+                                    clock=clock, recorder=recorder)
         self.corpus: list[dict] = []
         self.corpus_emb: np.ndarray | None = None
         self.stats = SearchStats()
@@ -133,11 +142,11 @@ class SimilaritySearchServer:
         engine's LRU, so mixed flows (`engine.score` on pairs touching
         corpus graphs) hit without recomputing.
         """
-        t0 = time.perf_counter()
+        t0 = self._clock()
         self.corpus = list(corpus)
         self.corpus_emb = self.engine.embed_graphs(self.corpus)
         self._calib = None             # proxy must recalibrate per index
-        self.stats.embed_seconds += time.perf_counter() - t0
+        self.stats.embed_seconds += self._clock() - t0
         self.stats.index_size = len(self.corpus)
         # Survive a failed corpus shard (DESIGN.md §12): the engine already
         # retried each failing embed bucket on the reference embedder and
@@ -288,9 +297,9 @@ class SimilaritySearchServer:
 
     def _exact_topk(self, query: dict, k: int) -> tuple:
         scores = self.scores(query)
-        t0 = time.perf_counter()
+        t0 = self._clock()
         top, s = self._rank(scores, k)
-        self.stats.topk_seconds += time.perf_counter() - t0
+        self.stats.topk_seconds += self._clock() - t0
         return top, s
 
     @staticmethod
@@ -320,12 +329,12 @@ class SimilaritySearchServer:
         """Full `[N]` similarity vector of `query` vs the indexed corpus."""
         if self.corpus_emb is None:
             raise ValueError("no corpus indexed; call index(corpus) first")
-        t0 = time.perf_counter()
+        t0 = self._clock()
         hq = self.engine.embed_graphs([query])
-        t1 = time.perf_counter()
+        t1 = self._clock()
         hq = np.broadcast_to(hq[0], self.corpus_emb.shape)
         out = self.engine.pair_scores_from_embeddings(hq, self.corpus_emb)
-        t2 = time.perf_counter()
+        t2 = self._clock()
         self.stats.queries += 1
         self.stats.pairs_scored += len(self.corpus)
         self.stats.embed_seconds += t1 - t0
@@ -346,9 +355,9 @@ class SimilaritySearchServer:
         # a 4-wide shortlist could never return 99 rows), clamped to N.
         m = max(1, min(max(int(prefilter_m), min(int(k), n)), n))
         nq = len(queries)
-        t0 = time.perf_counter()
+        t0 = self._clock()
         hq = self.engine.embed_graphs(queries)
-        t1 = time.perf_counter()
+        t1 = self._clock()
         self.stats.embed_seconds += t1 - t0
         calib = self._calibration()
         block = retrieval_block_cols(n, shard_rows=self.shard_rows)
@@ -371,7 +380,7 @@ class SimilaritySearchServer:
             self.engine.counters["prefilter_degraded"] += nq
             self.stats.prefilter_degraded += nq
             return [self._exact_topk(q, k) for q in queries]
-        t2 = time.perf_counter()
+        t2 = self._clock()
         self.stats.prefilter_seconds += t2 - t1
         # Ascending survivor order: sequential row gather AND the same tie
         # order as the exact path's stable sort — with m == N this makes
@@ -380,16 +389,16 @@ class SimilaritySearchServer:
         pidx = np.sort(pidx, axis=1)
         h2 = self.corpus_emb[pidx.reshape(-1)]
         h1 = np.repeat(hq, m, axis=0)
-        t3 = time.perf_counter()
+        t3 = self._clock()
         self.stats.gather_seconds += t3 - t2
         s = self.engine.pair_scores_from_embeddings(h1, h2).reshape(nq, m)
-        t4 = time.perf_counter()
+        t4 = self._clock()
         self.stats.rerank_seconds += t4 - t3
         results = []
         for qi in range(nq):
             loc, sc = self._rank(s[qi], k)
             results.append((pidx[qi][loc].astype(np.int64), sc))
-        self.stats.topk_seconds += time.perf_counter() - t4
+        self.stats.topk_seconds += self._clock() - t4
         self.stats.queries += nq
         self.stats.pairs_scored += nq * m
         self.stats.prefilter_queries += nq
@@ -435,7 +444,7 @@ class SimilaritySearchServer:
         quality and measured recalls are recorded for `health()`."""
         if self._calib is not None:
             return self._calib
-        t0 = time.perf_counter()
+        t0 = self._clock()
         emb = self.corpus_emb
         finite = np.flatnonzero(np.isfinite(emb).all(axis=1))
         ntn = self.engine.params["ntn"]
@@ -473,7 +482,7 @@ class SimilaritySearchServer:
             except (np.linalg.LinAlgError, ValueError):
                 pass                       # degenerate sample: stay exact
         self._calib = calib
-        self.stats.calibrate_seconds += time.perf_counter() - t0
+        self.stats.calibrate_seconds += self._clock() - t0
         self.engine.counters["prefilter_calibrations"] += 1
         self.engine.counters[f"prefilter_proxy:{calib['proxy']}"] += 1
         return calib

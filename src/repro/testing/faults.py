@@ -22,6 +22,9 @@ Sites are the engine's execution points:
                              search degrades to the exact full scan, §14)
     "train:packed_sparse" | "train:packed_dense" | "train:reference"
                            — loss_and_grad executor calls
+    "profile"              — the engine's trace-record append (§15): a
+                             failing recorder must never fail the scoring
+                             call, only count `profile_record_errors`
 
 Modes:
 
@@ -142,6 +145,9 @@ def inject(site: str, mode: str = "raise", *, after: int = 0,
 #     "store:manifest" — the ShardStore JSON manifest
 #     "ckpt:arrays"    — a checkpoint's arrays.<proc>.npz payload
 #     "ckpt:manifest"  — a checkpoint's msgpack manifest
+#     "profile"        — a TraceRecorder JSONL flush (§15): torn/garbled
+#                        record lines are skipped-and-counted on the next
+#                        read (`records_dropped`), never fail a flush
 #
 # Write-time modes (what reaches the disk despite the writer's fsync path):
 #

@@ -111,7 +111,8 @@ def build_simgnn_apply(*, peak_lr: float = 1e-3,
 
 def build_simgnn_train_step(engine, *, peak_lr: float = 1e-3,
                             max_grad_norm: float = 1.0,
-                            accum_steps: int = 1):
+                            accum_steps: int = 1,
+                            clock: Callable[[], float] | None = None):
     """Train step for the paper's model (MSE on exp(-nGED) targets), routed
     through a `core.engine.ScoringEngine` (DESIGN.md §11) — the engine is
     the single dispatch point for BOTH directions of the model, so no path
@@ -128,12 +129,32 @@ def build_simgnn_train_step(engine, *, peak_lr: float = 1e-3,
     (no momentum poisoning, no step-count advance), the skip is counted on
     `engine.counters["train_skipped_steps"]`, and the metrics carry
     `skipped=1` so loops and dashboards can see the gap.
+
+    Tracing (DESIGN.md §15): each full step also lands one `kind="train"`
+    / `path="train_step"` record on `engine.recorder` — the end-to-end
+    step latency next to the engine's own per-rung `train:<path>` records,
+    so the replay harness can compare optimizer overhead against forward/
+    backward time. `clock` defaults to the engine's injectable clock.
     """
     from repro.core.engine import tree_all_finite
 
     apply = build_simgnn_apply(peak_lr=peak_lr, max_grad_norm=max_grad_norm)
+    clk = clock if clock is not None else engine._clock
+
+    def _trace(n_pairs: int, wall_s: float) -> None:
+        rec = getattr(engine, "recorder", None)
+        if rec is None:
+            return
+        stats = getattr(engine.last_plan, "stats", None)
+        rec.record(kind="train", path="train_step", n_pairs=n_pairs,
+                   max_nodes=getattr(stats, "max_nodes", 0),
+                   mean_nodes=getattr(stats, "mean_nodes", 0.0),
+                   avg_degree=getattr(stats, "avg_degree", 0.0),
+                   density=getattr(stats, "density", 0.0),
+                   wall_s=wall_s)
 
     def step_fn(params, opt_state, batch):
+        t0 = clk()
         loss, grads = engine.loss_and_grad(batch["pairs"], batch["target"],
                                            params=params,
                                            accum_steps=accum_steps)
@@ -144,7 +165,11 @@ def build_simgnn_train_step(engine, *, peak_lr: float = 1e-3,
                        "lr": jnp.zeros((), jnp.float32),
                        "step": opt_state.step,
                        "skipped": jnp.ones((), jnp.float32)}
+            _trace(len(batch["pairs"]), clk() - t0)
             return params, opt_state, metrics
-        return apply(params, opt_state, loss, grads)
+        params, opt_state, metrics = apply(params, opt_state, loss, grads)
+        jax.block_until_ready(metrics["loss"])
+        _trace(len(batch["pairs"]), clk() - t0)
+        return params, opt_state, metrics
 
     return step_fn

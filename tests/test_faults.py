@@ -536,3 +536,42 @@ def test_fault_hook_disarms_on_exit():
     out = eng.score(_pairs(16, 4))
     assert eng.last_plan.degraded_from == ()
     assert np.isfinite(out).all()
+
+
+# ------------------------------------------------ profile seam (§15 tracing)
+
+def test_profile_record_fault_never_fails_scoring():
+    """A crashing trace recorder must never fail the scoring call it is
+    observing: the scores stay finite and healthy, the error is only
+    counted (`profile_record_errors`), and the recorder keeps working once
+    the fault clears (DESIGN.md §15 observability-is-free contract)."""
+    from repro.core.profile import TraceRecorder
+
+    rec = TraceRecorder(clock=_FakeClock())
+    eng = _engine("packed_sparse", recorder=rec)
+    pairs = _pairs(40, 6)
+    with faults.inject("profile") as plan:
+        out = eng.score(pairs)
+    assert plan.triggered == 1
+    assert np.isfinite(out).all()
+    assert eng.last_plan.degraded_from == ()          # scoring untouched
+    assert eng.counters["profile_record_errors"] == 1
+    assert rec.total_records == 0                     # the record was lost
+    eng.score(pairs)                                  # fault cleared
+    assert rec.total_records == 1
+    assert eng.counters["profile_record_errors"] == 1
+
+
+def test_profile_record_fault_never_fails_training():
+    """Same contract on the training side: loss_and_grad under an injected
+    recorder fault still returns finite grads and counts the error."""
+    from repro.core.profile import TraceRecorder
+
+    eng = _engine("packed_dense", recorder=TraceRecorder(clock=_FakeClock()))
+    batch = _pairs(41, 4)
+    targets = np.linspace(0.1, 0.9, len(batch)).astype(np.float32)
+    with faults.inject("profile", mode="raise") as plan:
+        loss, grads = eng.loss_and_grad(batch, targets)
+    assert plan.triggered >= 1
+    assert tree_all_finite(loss, grads)
+    assert eng.counters["profile_record_errors"] >= 1

@@ -83,3 +83,20 @@ def test_parity_matrix(path, dtype, batch):
 def test_matrix_covers_every_engine_path():
     """The matrix and the engine registry cannot drift apart silently."""
     assert set(ATOL_F32) == set(PATHS)
+
+
+@pytest.mark.parametrize("batch", BATCHES)
+def test_cold_measured_planner_matches_threshold(batch):
+    """With an empty profile the measured planner (the default) must be
+    BIT-identical to the legacy threshold rules — same auto-dispatch path,
+    same reason, byte-equal scores (DESIGN.md §15 cold-fallback contract).
+    The planner may only change decisions once it has fitted a model."""
+    pairs = list(_pairs(batch))
+    measured = ScoringEngine(_params("float32"), CFG, planner="measured")
+    threshold = ScoringEngine(_params("float32"), CFG, planner="threshold")
+    out_m = np.asarray(measured.score(pairs))
+    out_t = np.asarray(threshold.score(pairs))
+    assert measured.last_plan.path == threshold.last_plan.path
+    assert measured.last_plan.reason == threshold.last_plan.reason
+    assert not measured.last_plan.cost_estimates      # cold: no predictions
+    assert out_m.tobytes() == out_t.tobytes()

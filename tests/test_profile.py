@@ -1,0 +1,519 @@
+"""Trace recording + measured cost-model planner (DESIGN.md §15).
+
+Covers: the TraceRecorder ring/flush/load round trip, the golden-pinned
+profile format digest (ManifestError-style refusal of unknown versions or
+schemas, never a mis-parse), garbled-line skip-and-count, the injectable
+clock making recorded walls deterministic, the ridge cost model recovering
+planted latency structure, order-invariance of the fit (property test),
+the cold-planner threshold fallback pinned as a decision table, the warm
+planner flipping a decision the thresholds get wrong, and the chaos seams:
+a failing recorder (executor site "profile") or a torn profile flush (fs
+site "profile") must never fail scoring.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import TRAIN_PATHS, ScoringEngine, WorkloadStats
+from repro.core.profile import (PROFILE_FORMAT_VERSION, ProfileError,
+                                TraceRecord, TraceRecorder, fit_cost_model,
+                                read_profile, schema_digest, trace_features)
+from repro.core.simgnn import SimGNNConfig, init_simgnn_params
+from repro.data.graphs import random_graph
+from repro.testing import faults
+
+CFG = SimGNNConfig()
+PARAMS = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+
+#: Golden digest of (PROFILE_FORMAT_VERSION, TRACE_SCHEMA) — the persisted
+#: profile format contract, pinned the way tests/test_cache.py pins the
+#: WL `graph_key` hashes. If this fails you changed the record schema:
+#: bump `PROFILE_FORMAT_VERSION` so old profiles are refused loudly, then
+#: re-pin (and regenerate tests/data/golden_profile.jsonl).
+GOLDEN_SCHEMA_DIGEST = "c142c827c37d33b733ec10816d76b8c8"
+GOLDEN_PROFILE = os.path.join(os.path.dirname(__file__), "data",
+                              "golden_profile.jsonl")
+
+
+class _FakeClock:
+    def __init__(self, step=0.5):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+def _pairs(seed, n, max_n=24, avg_degree=2.0):
+    rng = np.random.default_rng(seed)
+    return [(random_graph(rng, int(rng.integers(5, max_n + 1)),
+                          avg_degree=avg_degree),
+             random_graph(rng, int(rng.integers(5, max_n + 1)),
+                          avg_degree=avg_degree))
+            for _ in range(n)]
+
+
+def _rec(path="packed_sparse", *, n_pairs=8, mean_nodes=16.0,
+         avg_degree=2.0, wall_s=0.01, seq=0, degraded_from=(), **kw):
+    return TraceRecord(kind=kw.pop("kind", "score"), path=path,
+                       n_pairs=n_pairs, max_nodes=kw.pop("max_nodes", 24),
+                       mean_nodes=mean_nodes, avg_degree=avg_degree,
+                       density=kw.pop("density", 0.1),
+                       occupancy=kw.pop("occupancy", 0.0),
+                       to_embed=kw.pop("to_embed", 0),
+                       degraded_from=tuple(degraded_from),
+                       attempts=kw.pop("attempts", 1),
+                       wall_s=wall_s, seq=seq)
+
+
+def _profile_for(paths, *, per_path=10, noise=0.0, seed=0):
+    """Synthetic clean profile with planted per-path linear latency:
+    wall = base[path] + per_pair[path] * n_pairs (+ optional noise)."""
+    rng = np.random.default_rng(seed)
+    base = {p: 0.002 * (i + 1) for i, p in enumerate(paths)}
+    slope = {p: 0.0005 * (i + 1) for i, p in enumerate(paths)}
+    out = []
+    seq = 0
+    for p in paths:
+        for j in range(per_path):
+            n = 4 + 3 * j
+            w = base[p] + slope[p] * n
+            if noise:
+                w *= 1.0 + rng.uniform(-noise, noise)
+            out.append(_rec(p, n_pairs=n, wall_s=w, seq=seq))
+            seq += 1
+    return out
+
+
+# ------------------------------------------------------------ recorder core
+
+
+def test_recorder_ring_capacity_and_total():
+    rec = TraceRecorder(capacity=4)
+    for i in range(10):
+        rec.record(kind="score", path="reference", n_pairs=1, max_nodes=8,
+                   mean_nodes=8.0, avg_degree=1.0, density=0.1,
+                   wall_s=0.001 * (i + 1))
+    assert len(rec) == 4
+    assert rec.total_records == 10
+    # oldest evicted, newest kept, seq strictly increasing
+    walls = [r.wall_s for r in rec.records()]
+    assert walls == pytest.approx([0.007, 0.008, 0.009, 0.01])
+    seqs = [r.seq for r in rec.records()]
+    assert seqs == sorted(seqs) and seqs[-1] == 9
+
+
+def test_recorder_never_raises_on_bad_fields():
+    rec = TraceRecorder()
+    out = rec.record(kind="score", path="reference", n_pairs="not an int",
+                     max_nodes=8, mean_nodes=8.0, avg_degree=1.0,
+                     density=0.1)
+    assert out is None
+    assert rec.counters["record_errors"] == 1
+    assert len(rec) == 0
+
+
+def test_flush_and_load_round_trip(tmp_path):
+    path = str(tmp_path / "profile.jsonl")
+    rec = TraceRecorder(path=path)
+    for i in range(5):
+        rec.record(kind="score", path="packed_dense", n_pairs=2 + i,
+                   max_nodes=16, mean_nodes=12.0, avg_degree=2.0,
+                   density=0.2, wall_s=0.01 * (i + 1))
+    assert rec.flush() == 5
+    assert rec.flush() == 0                     # nothing new pending
+    loaded = TraceRecorder.load(path)
+    assert [r.wall_s for r in loaded.records()] == \
+        [r.wall_s for r in rec.records()]
+    assert loaded.total_records == 5
+    # appending through the loaded recorder extends, not duplicates
+    loaded.record(kind="score", path="packed_dense", n_pairs=9,
+                  max_nodes=16, mean_nodes=12.0, avg_degree=2.0,
+                  density=0.2, wall_s=0.06)
+    assert loaded.flush() == 1
+    records, dropped = read_profile(path)
+    assert len(records) == 6 and dropped == 0
+    assert records[-1].seq == 5                 # load resumes the sequence
+
+
+def test_auto_flush_every(tmp_path):
+    path = str(tmp_path / "profile.jsonl")
+    rec = TraceRecorder(path=path, flush_every=3)
+    for i in range(7):
+        rec.record(kind="score", path="reference", n_pairs=1, max_nodes=8,
+                   mean_nodes=8.0, avg_degree=1.0, density=0.1,
+                   wall_s=0.001)
+    assert rec.counters["flushes"] == 2         # at 3 and 6
+    assert len(read_profile(path)[0]) == 6
+
+
+# ----------------------------------------------------- format golden pins
+
+
+def test_schema_digest_golden_pinned():
+    assert PROFILE_FORMAT_VERSION == 1
+    assert schema_digest() == GOLDEN_SCHEMA_DIGEST
+
+
+def test_golden_profile_reads_clean():
+    """The committed trace (a past run's profile) must stay readable as
+    long as the schema digest stands."""
+    records, dropped = read_profile(GOLDEN_PROFILE)
+    assert dropped == 0
+    assert [r.path for r in records] == [
+        "packed_sparse", "packed_dense", "bucketed_mega",
+        "embedding_cache", "packed_dense", "train:packed_sparse",
+        "train_step"]
+    assert records[4].degraded_from == ("packed_sparse",)
+    assert records[3].to_embed == 1
+    header = json.loads(open(GOLDEN_PROFILE).readline())
+    assert header == {"profile_format_version": PROFILE_FORMAT_VERSION,
+                      "schema_digest": GOLDEN_SCHEMA_DIGEST}
+
+
+@pytest.mark.parametrize("mutate", ["version", "digest", "not_json",
+                                    "not_object"])
+def test_unknown_profile_refused_structured(tmp_path, mutate):
+    """Header-level damage/misversioning is refused with ProfileError —
+    never guessed at (the ManifestError contract, DESIGN.md §13/§15)."""
+    src = open(GOLDEN_PROFILE).read().splitlines()
+    head = json.loads(src[0])
+    if mutate == "version":
+        head["profile_format_version"] = PROFILE_FORMAT_VERSION + 1
+        src[0] = json.dumps(head)
+    elif mutate == "digest":
+        head["schema_digest"] = "0" * 32
+        src[0] = json.dumps(head)
+    elif mutate == "not_json":
+        src[0] = "{torn header"
+    else:
+        src[0] = json.dumps(["not", "an", "object"])
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write("\n".join(src) + "\n")
+    with pytest.raises(ProfileError):
+        TraceRecorder.load(path)
+
+
+def test_missing_profile_refused():
+    with pytest.raises(ProfileError):
+        TraceRecorder.load("/nonexistent/profile.jsonl")
+
+
+def test_garbled_record_lines_skipped_and_counted(tmp_path):
+    """Per-line damage loses samples, never the profile: torn JSON, wrong
+    fields, wrong types are each dropped-and-counted."""
+    lines = open(GOLDEN_PROFILE).read().splitlines()
+    bad = json.loads(lines[1])
+    bad["n_pairs"] = "eight"                    # wrong type
+    extra = json.loads(lines[1])
+    extra["surprise"] = 1                       # foreign field
+    doctored = ([lines[0], lines[1][: len(lines[1]) // 2]]  # torn record
+                + lines[2:4] + [json.dumps(bad), json.dumps(extra)]
+                + lines[4:])
+    path = str(tmp_path / "garbled.jsonl")
+    with open(path, "w") as f:
+        f.write("\n".join(doctored) + "\n")
+    records, dropped = read_profile(path)
+    assert dropped == 3
+    assert len(records) == len(lines) - 1 - 1   # header + torn line
+    # a flush through the damaged file self-heals: re-read keeps only the
+    # valid lines plus the new append, and drops are counted once more
+    rec = TraceRecorder.load(path)
+    rec.record(kind="score", path="reference", n_pairs=1, max_nodes=8,
+               mean_nodes=8.0, avg_degree=1.0, density=0.1, wall_s=0.001)
+    assert rec.flush() == 1
+    records2, dropped2 = read_profile(path)
+    assert dropped2 == 0                        # healed on disk
+    assert len(records2) == len(records) + 1
+
+
+# ------------------------------------------------------------ engine traces
+
+
+def test_engine_records_score_trace_with_injectable_clock():
+    clock = _FakeClock(step=0.25)
+    eng = ScoringEngine(PARAMS, CFG, path="packed_sparse", clock=clock)
+    pairs = _pairs(0, 6)
+    eng.score(pairs)
+    recs = eng.recorder.records()
+    assert len(recs) == 1
+    r = recs[0]
+    assert (r.kind, r.path, r.n_pairs) == ("score", "packed_sparse", 6)
+    # the fake clock ticks 0.25 per read; other reads (breakers etc.) may
+    # land between t0 and t1 so the wall is a positive multiple of 0.25
+    assert r.wall_s > 0 and r.wall_s % 0.25 == pytest.approx(0.0)
+    assert r.mean_nodes == pytest.approx(eng.last_plan.stats.mean_nodes)
+    assert r.avg_degree == pytest.approx(eng.last_plan.stats.avg_degree)
+    assert 0.0 < r.occupancy <= 1.0             # packed path measured pack
+    assert r.degraded_from == ()
+
+
+def test_engine_records_train_trace():
+    eng = ScoringEngine(PARAMS, CFG, path="packed_sparse",
+                        clock=_FakeClock())
+    pairs = _pairs(1, 6)
+    targets = np.linspace(0.1, 0.9, 6).astype(np.float32)
+    eng.loss_and_grad(pairs, targets)
+    recs = eng.recorder.records()
+    assert [(r.kind, r.path) for r in recs] == \
+        [("train", "train:packed_sparse")]
+    assert recs[0].wall_s > 0
+
+
+def test_degraded_call_records_tail_and_is_excluded_from_fit():
+    eng = ScoringEngine(PARAMS, CFG, path="auto", clock=_FakeClock())
+    pairs = _pairs(2, 8, avg_degree=2.0)        # auto -> packed_sparse
+    with faults.inject("packed_sparse", mode="raise"):
+        eng.score(pairs)
+    r = eng.recorder.records()[-1]
+    assert "packed_sparse" in r.degraded_from
+    assert r.path != "packed_sparse"            # the rung that served
+    model = fit_cost_model([r], min_support=1)
+    assert model.weights == {}                  # polluted timing: not clean
+
+
+def test_health_reports_planner_state():
+    eng = ScoringEngine(PARAMS, CFG, path="packed_sparse",
+                        clock=_FakeClock())
+    eng.score(_pairs(3, 5))
+    h = eng.health()["planner"]
+    assert h["mode"] == "measured"
+    assert h["enabled"] is False                # no model yet
+    assert h["records"] == 1
+    assert h.get("model") is None               # snapshot only once fitted
+
+
+# -------------------------------------------------------------- cost model
+
+
+def test_fit_recovers_planted_latency_model():
+    paths = ("bucketed_mega", "packed_dense", "packed_sparse")
+    model = fit_cost_model(_profile_for(paths), min_support=8)
+    assert model.supports(paths)
+    for i, p in enumerate(paths):
+        # noiseless data: residual is only the (tiny) ridge-penalty bias
+        assert model.residual_medape[p] < 1e-2
+        for n in (5, 17, 40):
+            want = 0.002 * (i + 1) + 0.0005 * (i + 1) * n
+            got = model.predict(p, trace_features(n, 16.0, 2.0))
+            assert got == pytest.approx(want, rel=1e-2)
+
+
+def test_fit_ignores_underdsupported_and_dirty_paths():
+    records = _profile_for(("packed_dense",), per_path=10)
+    records += [_rec("packed_sparse", wall_s=0.01, seq=100 + i)
+                for i in range(3)]              # under min_support
+    records += [_rec("bucketed_mega", wall_s=0.01, seq=200 + i,
+                     degraded_from=("packed_sparse",)) for i in range(10)]
+    records += [_rec("two_kernel", wall_s=0.0, seq=300 + i)
+                for i in range(10)]             # zero wall: not clean
+    model = fit_cost_model(records, min_support=8)
+    assert set(model.weights) == {"packed_dense"}
+    assert model.support["packed_dense"] == 10
+
+
+def test_predictions_clamped_positive():
+    # steeply decreasing walls force a negative extrapolation at large n
+    records = [_rec("packed_dense", n_pairs=n, wall_s=0.1 / n, seq=i)
+               for i, n in enumerate(range(4, 24))]
+    model = fit_cost_model(records, min_support=8)
+    assert model.predict("packed_dense",
+                         trace_features(10_000, 16.0, 2.0)) >= 1e-9
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_fit_invariant_under_record_order(seed):
+    """Property: the argmin the planner takes must not depend on arrival
+    order — any permutation of the records produces bit-identical weights
+    (fit rows are sorted internally before any linear algebra). Written as
+    a seeded shuffle sweep so the invariant runs without hypothesis, like
+    tests/test_pack_properties.py's note."""
+    records = _profile_for(("packed_dense", "packed_sparse"),
+                           per_path=9, noise=0.3, seed=7)
+    base = fit_cost_model(records, min_support=8)
+    shuffled = list(records)
+    np.random.default_rng(seed).shuffle(shuffled)
+    other = fit_cost_model(shuffled, min_support=8)
+    assert set(base.weights) == set(other.weights)
+    for p in base.weights:
+        assert base.weights[p].tobytes() == other.weights[p].tobytes()
+        assert base.residual_medape[p] == other.residual_medape[p]
+
+
+# ------------------------------------------------- planner decision rule
+
+
+#: The threshold decision table the cold planner must reproduce — one row
+#: per folklore rule (DESIGN.md §15 pins these as the fallback contract).
+COLD_DECISIONS = [
+    # (stats, hit_frac, train) -> path
+    (WorkloadStats(n_pairs=8, max_nodes=24, mean_nodes=16.0,
+                   avg_degree=2.0, density=0.1), 0.0, False,
+     "packed_sparse"),                     # degree <= 4: sparse
+    (WorkloadStats(n_pairs=8, max_nodes=24, mean_nodes=16.0,
+                   avg_degree=6.0, density=0.4), 0.0, False,
+     "packed_dense"),                      # degree > 4: dense
+    (WorkloadStats(n_pairs=3, max_nodes=24, mean_nodes=16.0,
+                   avg_degree=2.0, density=0.1), 0.0, False,
+     "bucketed_mega"),                     # batch < MIN_PACK_PAIRS
+    (WorkloadStats(n_pairs=8, max_nodes=24, mean_nodes=16.0,
+                   avg_degree=2.0, density=0.1), 0.6, False,
+     "embedding_cache"),                   # >= 50% resident
+    (WorkloadStats(n_pairs=3, max_nodes=24, mean_nodes=16.0,
+                   avg_degree=2.0, density=0.1), 0.0, True,
+     "reference"),                         # train small batch
+    (WorkloadStats(n_pairs=8, max_nodes=24, mean_nodes=16.0,
+                   avg_degree=6.0, density=0.4), 0.9, True,
+     "packed_dense"),                      # train never reads the cache
+]
+
+
+@pytest.mark.parametrize("stats,hit_frac,train,want", COLD_DECISIONS)
+def test_cold_planner_decision_table(stats, hit_frac, train, want):
+    """Empty profile: `_select` must be bit-identical (path AND reason) to
+    the threshold rules for every folklore regime."""
+    measured = ScoringEngine(PARAMS, CFG, planner="measured")
+    threshold = ScoringEngine(PARAMS, CFG, planner="threshold")
+    got = measured._select(stats, hit_frac, train=train)
+    ref = threshold._select(stats, hit_frac, train=train)
+    assert got == ref
+    assert got[0] == want
+    assert got[2] == {}                         # no estimates when cold
+
+
+def test_partial_support_falls_back_whole():
+    """A profile covering SOME candidates must not steer: comparing a
+    measured path against an unmeasured one is meaningless."""
+    eng = ScoringEngine(PARAMS, CFG, planner="measured")
+    for r in _profile_for(("packed_dense", "packed_sparse")):
+        eng.recorder._ring.append(r)
+        eng.recorder.total_records += 1
+    stats = WorkloadStats(n_pairs=8, max_nodes=24, mean_nodes=16.0,
+                          avg_degree=2.0, density=0.1)
+    got = eng._select(stats, 0.0)
+    ref = ScoringEngine(PARAMS, CFG,
+                        planner="threshold")._select(stats, 0.0)
+    assert got == ref                           # bucketed_mega missing
+
+
+def test_warm_planner_overrides_threshold_rule():
+    """With full support and bucketed_mega measured cheapest, the planner
+    must flip a low-degree batch away from the sparse threshold rule, and
+    publish its estimates on the plan."""
+    paths = ("bucketed_mega", "packed_dense", "packed_sparse")
+    eng = ScoringEngine(PARAMS, CFG, planner="measured")
+    for r in _profile_for(paths):               # bucketed_mega cheapest
+        eng.recorder._ring.append(r)
+        eng.recorder.total_records += 1
+    pairs = _pairs(4, 8, avg_degree=2.0)
+    plan = eng.plan(pairs)
+    assert plan.path == "bucketed_mega"
+    assert "cost model" in plan.reason
+    assert set(plan.cost_estimates) == set(paths)
+    assert plan.cost_estimates["bucketed_mega"] == \
+        min(plan.cost_estimates.values())
+    # threshold engine on the same batch keeps the folklore rule
+    ref = ScoringEngine(PARAMS, CFG, planner="threshold").plan(pairs)
+    assert ref.path == "packed_sparse"
+    assert ref.cost_estimates == {}
+    # and health now reports the fitted model
+    h = eng.health()["planner"]
+    assert h["enabled"] is True
+    assert set(h["model"]["support"]) >= set(paths)
+
+
+def test_train_planner_uses_train_keyed_model():
+    eng = ScoringEngine(PARAMS, CFG, planner="measured")
+    train_keys = tuple(f"train:{p}" for p in TRAIN_PATHS)
+    for r in _profile_for(train_keys):          # train:reference cheapest
+        eng.recorder._ring.append(r)
+        eng.recorder.total_records += 1
+    plan = eng.plan(_pairs(5, 8, avg_degree=2.0), train=True)
+    assert plan.path == "reference"
+    assert set(plan.cost_estimates) == set(TRAIN_PATHS)
+
+
+def test_planner_refit_cadence():
+    eng = ScoringEngine(PARAMS, CFG, path="packed_sparse",
+                        clock=_FakeClock())
+    pairs = _pairs(6, 5)
+    for _ in range(3):
+        eng.score(pairs)
+    assert eng.counters["planner_refits"] == 0  # < PLANNER_MIN_SUPPORT
+    for _ in range(6):
+        eng.score(pairs)
+    eng._cost_model()
+    refits = eng.counters["planner_refits"]
+    assert refits == 1                          # first fit at >= support
+    for _ in range(eng.PLANNER_REFIT_EVERY):
+        eng.score(pairs)
+    eng._cost_model()
+    assert eng.counters["planner_refits"] == refits + 1
+
+
+# ------------------------------------------------------------- chaos seams
+
+
+def test_recorder_failure_never_fails_scoring():
+    """Executor seam site "profile": a crashing recorder is counted and
+    swallowed — the scores still come back finite."""
+    eng = ScoringEngine(PARAMS, CFG, path="packed_sparse",
+                        clock=_FakeClock())
+    pairs = _pairs(7, 6)
+    with faults.inject("profile", mode="raise") as plan:
+        out = eng.score(pairs)
+    assert plan.triggered >= 1
+    assert np.isfinite(out).all()
+    assert eng.counters["profile_record_errors"] >= 1
+    assert len(eng.recorder) == 0               # nothing recorded
+    # recorder works again once the fault clears
+    eng.score(pairs)
+    assert len(eng.recorder) == 1
+
+
+def test_torn_profile_flush_self_heals(tmp_path):
+    """Fs seam site "profile": a torn flush loses at most the tail — the
+    next read skips-and-counts the damaged line and the next flush
+    rewrites a clean file."""
+    path = str(tmp_path / "profile.jsonl")
+    rec = TraceRecorder(path=path)
+    for i in range(4):
+        rec.record(kind="score", path="reference", n_pairs=1 + i,
+                   max_nodes=8, mean_nodes=8.0, avg_degree=1.0,
+                   density=0.1, wall_s=0.001)
+    with faults.fs_inject("profile", mode="torn") as plan:
+        rec.flush()
+    assert plan.triggered == 1
+    records, dropped = read_profile(path)       # torn mid-file
+    assert dropped >= 1
+    assert len(records) < 4
+    rec2 = TraceRecorder.load(path)
+    rec2.record(kind="score", path="reference", n_pairs=9, max_nodes=8,
+                mean_nodes=8.0, avg_degree=1.0, density=0.1, wall_s=0.002)
+    assert rec2.flush() == 1
+    records2, dropped2 = read_profile(path)
+    assert dropped2 == 0                        # healed
+    assert records2[-1].n_pairs == 9
+
+
+def test_missing_profile_write_keeps_pending(tmp_path):
+    """A dropped flush (site "profile", mode "missing") leaves no file —
+    and the recorder still holds the ring so nothing is lost in memory."""
+    path = str(tmp_path / "profile.jsonl")
+    rec = TraceRecorder(path=path)
+    rec.record(kind="score", path="reference", n_pairs=1, max_nodes=8,
+               mean_nodes=8.0, avg_degree=1.0, density=0.1, wall_s=0.001)
+    with faults.fs_inject("profile", mode="missing"):
+        rec.flush()
+    assert not os.path.exists(path)
+    assert len(rec) == 1
+    rec.record(kind="score", path="reference", n_pairs=2, max_nodes=8,
+               mean_nodes=8.0, avg_degree=1.0, density=0.1, wall_s=0.001)
+    rec.flush()                                 # clean retry persists all
+    assert len(read_profile(path)[0]) >= 1

@@ -398,6 +398,85 @@ def test_loop_fresh_start_when_everything_corrupt(tmp_path):
     assert float(np.asarray(params["x"])) == 3.0   # started from 0
 
 
+# ------------------------------------- surface 3: trace profile (§15)
+
+def _profile_recorder(tmp_path, n=4):
+    """Recorder with `n` deterministic records staged for flush."""
+    from repro.core.profile import TraceRecorder
+
+    rec = TraceRecorder(path=str(tmp_path / "trace.jsonl"),
+                        clock=lambda: 0.0)
+    for i in range(n):
+        rec.record(kind="score", path="packed_dense", n_pairs=4 + i,
+                   max_nodes=16, mean_nodes=8.0, avg_degree=2.0,
+                   density=0.25, wall_s=0.01)
+    return rec
+
+
+def test_profile_torn_flush_skipped_and_counted(tmp_path):
+    """A torn profile flush must not raise, and the next read self-heals:
+    the truncated tail is dropped-and-counted, every surviving record
+    parses clean (§15 contract — losing samples is recoverable)."""
+    from repro.core.profile import read_profile
+
+    rec = _profile_recorder(tmp_path)
+    with faults.fs_inject("profile", mode="torn") as plan:
+        rec.flush()
+    assert plan.triggered == 1
+    records, dropped = read_profile(rec.path)
+    assert len(records) < 4                # part of the flush was lost
+    assert dropped <= 1                    # at most the one torn line
+    assert all(r.path == "packed_dense" for r in records)
+
+
+def test_profile_missing_flush_never_raises(tmp_path):
+    """A dropped profile flush (writer believes it succeeded) degrades
+    observability only: flush() returns quietly, the ring keeps every
+    sample, and the reader reports the absence as a structured error."""
+    from repro.core.profile import ProfileError, read_profile
+
+    rec = _profile_recorder(tmp_path)
+    with faults.fs_inject("profile", mode="missing") as plan:
+        rec.flush()
+    assert plan.triggered == 1
+    assert not os.path.exists(rec.path)
+    with pytest.raises(ProfileError, match="no profile"):
+        read_profile(rec.path)
+    assert rec.total_records == 4          # in-memory ring untouched
+
+
+def test_profile_at_rest_bitflip_skipped_and_counted(tmp_path):
+    """At-rest bit rot garbling one record line: that line (and only it)
+    is skipped-and-counted by both readers, and `load()` resumes the seq
+    counter past the survivors."""
+    from repro.core.profile import TraceRecorder, read_profile
+
+    rec = _profile_recorder(tmp_path)
+    rec.flush()
+    with open(rec.path, "rb") as f:
+        header = f.readline()
+    # flip the opening '{' of the first record line -> invalid JSON
+    faults.corrupt_file(rec.path, "bitflip", at_byte=len(header))
+    records, dropped = read_profile(rec.path)
+    assert dropped == 1
+    assert [r.seq for r in records] == [1, 2, 3]
+    loaded = TraceRecorder.load(rec.path)
+    assert loaded.counters["records_dropped"] == 1
+    assert loaded._seq == 4                # past the surviving max seq
+
+
+def test_profile_at_rest_torn_header_refused(tmp_path):
+    """Damage inside the HEADER is whole-file distrust, not per-line skip:
+    a schema we cannot verify must raise ProfileError, never guess."""
+    from repro.core.profile import ProfileError, read_profile
+
+    rec = _profile_recorder(tmp_path)
+    rec.flush()
+    faults.corrupt_file(rec.path, "torn", at_byte=10)
+    with pytest.raises(ProfileError):
+        read_profile(rec.path)
+
+
 # ----------------------------------------------------------- seam hygiene
 
 def test_fs_hook_disarms_on_exit(tmp_path):
