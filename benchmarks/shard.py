@@ -1,0 +1,191 @@
+"""Device-sharded execution benchmark + CI gate (DESIGN.md §16).
+
+Runs the sharded parity matrix on a simulated 8-device host (the opt-in
+`--xla_force_host_platform_device_count` flag, armed before jax touches a
+backend): packed score and loss_and_grad at device counts {1, 2, 8} against
+the single-device engine, the per-shard search scans against the unsharded
+two-stage path, and an injected dead shard through the §12 collapse rung.
+Emits one `BENCH {json}` line per measurement — multi-device records carry
+the planner's per-device tile occupancy. On this CPU-only container the
+mesh is simulated, so wall times are trajectory baselines, not speedups.
+
+Usage:  PYTHONPATH=src python benchmarks/shard.py [--check]
+            [--batch 96] [--out shard_bench.json]
+
+`--check` (CI gate): non-zero exit if
+  * score or grad parity vs single-device drifts above 1e-6 at any of
+    device counts {1, 2, 8};
+  * the per-shard search top-k is not bit-identical to the unsharded
+    two-stage path;
+  * an injected dead shard fails the batch instead of degrading (the
+    collapse must serve exact scores and be counted on health()).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):   # `python benchmarks/shard.py` support
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.distributed.sharding import force_host_device_count  # noqa: E402
+
+N_DEVICES = force_host_device_count(8)      # before any other jax use
+
+import jax                                   # noqa: E402
+import numpy as np                           # noqa: E402
+
+from benchmarks.common import finish_check, time_fn              # noqa: E402
+from repro.configs.simgnn_aids import CONFIG as CFG              # noqa: E402
+from repro.core.engine import ScoringEngine                      # noqa: E402
+from repro.core.simgnn import init_simgnn_params                 # noqa: E402
+from repro.data.graphs import random_graph, search_pairs         # noqa: E402
+from repro.distributed.sharding import tile_runtime              # noqa: E402
+from repro.serve.search import SimilaritySearchServer            # noqa: E402
+from repro.testing import faults                                 # noqa: E402
+
+PARITY_BOUND = 1e-6
+DEVICE_COUNTS = (1, 2, 8)
+
+
+def _maxdiff(a, b) -> float:
+    return float(np.max(np.abs(np.asarray(a, np.float64)
+                               - np.asarray(b, np.float64))))
+
+
+def _tree_maxdiff(a, b) -> float:
+    return max(_maxdiff(x, y) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def run(batch: int = 96, seed: int = 61, iters: int = 3):
+    params = init_simgnn_params(jax.random.PRNGKey(0), CFG)
+    pairs = search_pairs(seed, batch, avg_degree=2.1)
+    targets = np.linspace(0.0, 1.0, batch).astype(np.float32)
+    records, failures = [], []
+
+    base = {p: ScoringEngine(params, CFG, path=p)
+            for p in ("packed_sparse", "packed_dense")}
+    ref_scores = {p: e.score(pairs) for p, e in base.items()}
+    ref_sse, ref_grads = base["packed_sparse"].loss_and_grad(pairs, targets)
+
+    for nd in DEVICE_COUNTS:
+        if nd > N_DEVICES:
+            failures.append(f"host exposes {N_DEVICES} devices, need {nd}")
+            continue
+        rt = tile_runtime(nd)
+        for path in ("packed_sparse", "packed_dense"):
+            eng = ScoringEngine(params, CFG, path=path, runtime=rt)
+            s = eng.score(pairs)
+            wall = time_fn(lambda e=eng: e.score(pairs), warmup=1,
+                           iters=iters)
+            diff = _maxdiff(s, ref_scores[path])
+            ps = eng.last_pack_stats or {}
+            rec = {"bench": "shard", "policy": f"score:{path}",
+                   "devices": nd, "batch": batch,
+                   "wall_s": round(wall, 6), "score_maxdiff": diff,
+                   "tiles": ps.get("tiles"),
+                   "tiles_padded": ps.get("tiles_padded"),
+                   "device_occupancy": ps.get("device_occupancy",
+                                              [1.0] * nd)}
+            records.append(rec)
+            print("BENCH " + json.dumps(rec))
+            if diff > PARITY_BOUND:
+                failures.append(f"score:{path}@{nd}d parity {diff:.2e} "
+                                f"> {PARITY_BOUND:g}")
+
+        eng = ScoringEngine(params, CFG, path="packed_sparse", runtime=rt)
+        s, g = eng.loss_and_grad(pairs, targets)
+        wall = time_fn(lambda e=eng: e.loss_and_grad(pairs, targets)[0],
+                       warmup=1, iters=iters)
+        sdiff, gdiff = _maxdiff(s, ref_sse), _tree_maxdiff(g, ref_grads)
+        ps = eng.last_pack_stats or {}
+        rec = {"bench": "shard", "policy": "train:packed_sparse",
+               "devices": nd, "batch": batch, "wall_s": round(wall, 6),
+               "loss_maxdiff": sdiff, "grad_maxdiff": gdiff,
+               "tiles": ps.get("tiles"),
+               "tiles_padded": ps.get("tiles_padded")}
+        records.append(rec)
+        print("BENCH " + json.dumps(rec))
+        if max(sdiff, gdiff) > PARITY_BOUND:
+            failures.append(f"train@{nd}d parity loss {sdiff:.2e} / grad "
+                            f"{gdiff:.2e} > {PARITY_BOUND:g}")
+
+    # ---- per-shard search scans vs the unsharded two-stage path --------
+    rng = np.random.default_rng(seed)
+    corpus = [random_graph(rng, int(rng.integers(6, 24)), avg_degree=4)
+              for _ in range(128)]
+    queries = [random_graph(rng, int(rng.integers(6, 24)), avg_degree=4)
+               for _ in range(8)]
+    ref_srv = SimilaritySearchServer(params, CFG, shard_rows=16)
+    ref_srv.index(corpus)
+    want = ref_srv.search(queries, k=10, mode="two_stage", prefilter_m=32)
+    nd = min(8, N_DEVICES)
+    srv = SimilaritySearchServer(params, CFG, shard_rows=16,
+                                 runtime=tile_runtime(nd))
+    srv.index(corpus)
+    got = srv.search(queries, k=10, mode="two_stage", prefilter_m=32)
+    identical = all(np.array_equal(gi, wi) and np.array_equal(gs, ws)
+                    for (wi, ws), (gi, gs) in zip(want, got))
+    wall = time_fn(lambda: srv.search(queries, k=10, mode="two_stage",
+                                      prefilter_m=32)[0][0],
+                   warmup=1, iters=iters)
+    rec = {"bench": "shard", "policy": "search:two_stage",
+           "devices": nd, "spans": srv.health()["prefilter"]["spans"],
+           "corpus": len(corpus), "queries": len(queries),
+           "wall_s": round(wall, 6), "topk_bit_identical": identical}
+    records.append(rec)
+    print("BENCH " + json.dumps(rec))
+    if not identical:
+        failures.append("per-shard search top-k differs from the "
+                        "unsharded two-stage path")
+
+    # ---- dead shard degrades, never fails ------------------------------
+    nd = min(2, N_DEVICES)
+    eng = ScoringEngine(params, CFG, path="packed_sparse",
+                        runtime=tile_runtime(nd))
+    try:
+        with faults.inject("sharded:packed_sparse", "raise", times=1):
+            s = eng.score(pairs)
+        diff = _maxdiff(s, ref_scores["packed_sparse"])
+        counted = (eng.health()["counters"]
+                   .get(f"errors:packed_sparse@{nd}d", 0))
+        degraded = list(eng.last_plan.degraded_from)
+        ok = diff <= PARITY_BOUND and counted >= 1
+    except Exception as exc:                          # noqa: BLE001
+        diff, counted, degraded, ok = None, 0, [], False
+        failures.append(f"dead shard failed the batch: {exc!r}")
+    rec = {"bench": "shard", "policy": "fault:dead_shard", "devices": nd,
+           "score_maxdiff": diff, "degraded_from": degraded,
+           "error_counted": counted, "ok": ok}
+    records.append(rec)
+    print("BENCH " + json.dumps(rec))
+    if not ok and not any("dead shard failed" in f for f in failures):
+        failures.append("dead shard did not degrade cleanly "
+                        f"(maxdiff {diff}, counted {counted})")
+
+    return records, failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=96)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=61)
+    ap.add_argument("--check", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    records, failures = run(batch=args.batch, seed=args.seed,
+                            iters=args.iters)
+    finish_check(records, failures, bench="shard", out=args.out,
+                 check=args.check)
+
+
+if __name__ == "__main__":
+    main()

@@ -355,14 +355,20 @@ def packed_pair_edges(packed: PackedPairBatch,
             ov_need = max(ov_need, int(np.bincount(tiles[spill]).max()))
     e_ov = next_pow2(ov_need, floor=max(8, overflow_budget))
 
+    # Narrow index planes (DESIGN.md §16 satellite): within-tile node
+    # indices fit int16 whenever the node budget does, halving the four
+    # index planes' host->device bytes; the kernels' gathers and compares
+    # promote against int32 iotas/offsets, so scores are bit-identical
+    # (pinned by the int16 row of the sharded parity matrix).
+    idx_dtype = np.int16 if nb < 2 ** 15 else np.int32
     out = []
     for t, tiles, rows, cols, w, rank, _ in sides:
-        cs = np.zeros((t, nb * d), np.int32)
-        cr = np.tile(np.tile(np.arange(nb, dtype=np.int32), d), (t, 1))
+        cs = np.zeros((t, nb * d), idx_dtype)
+        cr = np.tile(np.tile(np.arange(nb, dtype=idx_dtype), d), (t, 1))
         cw = np.zeros((t, nb * d), np.float32)
         cm = np.zeros((t, nb * d), np.float32)
-        os_ = np.zeros((t, e_ov), np.int32)
-        or_ = np.zeros((t, e_ov), np.int32)
+        os_ = np.zeros((t, e_ov), idx_dtype)
+        or_ = np.zeros((t, e_ov), idx_dtype)
         ow = np.zeros((t, e_ov), np.float32)
         om = np.zeros((t, e_ov), np.float32)
         fit = rank < d

@@ -79,7 +79,8 @@ import numpy as np
 
 from repro.core.cache import EmbeddingCache, graph_fingerprint, graph_key
 from repro.core.health import CircuitBreaker
-from repro.core.profile import TraceRecorder, fit_cost_model, trace_features
+from repro.core.profile import (TraceRecorder, cost_key, fit_cost_model,
+                                trace_features)
 from repro.core.validate import GraphValidationError, validate_pairs
 
 PATHS = ("reference", "two_kernel", "bucketed_mega", "packed_dense",
@@ -112,6 +113,14 @@ TRAIN_DEGRADE_LADDER = {
     "packed_dense": ("reference",),
     "reference": (),
 }
+
+
+def _rung_name(path: str, devices: int) -> str:
+    """Display/counter name of a ladder rung: the bare path single-device,
+    `path@Nd` when the rung runs tile-sharded over N mesh devices
+    (DESIGN.md §16) — matches `profile.cost_key` so counters, breaker
+    snapshots and cost-model keys all read the same."""
+    return path if devices <= 1 else f"{path}@{int(devices)}d"
 
 #: Fault-injection seam (DESIGN.md §12): `repro.testing.faults.inject()`
 #: arms this with a hook; production leaves it None (one attribute read per
@@ -202,6 +211,11 @@ class ScorePlan:
     #: two-stage retrieval (DESIGN.md §14): the top-M shortlist size the
     #: prefilter scan used before the exact rerank (0 = no prefilter ran).
     prefilter_m: int = 0
+    #: device-sharded execution (DESIGN.md §16): mesh devices the planner
+    #: assigned this call's packed tiles to (1 = unsharded; always 1 off-mesh
+    #: and on unpacked paths). The §12 ladder's first degradation for a
+    #: devices>1 plan is the same path collapsed to a single device.
+    devices: int = 1
     #: measured-planner estimates (DESIGN.md §15): predicted wall seconds
     #: per candidate path when the fitted cost model drove this decision;
     #: empty when the threshold rules did (cold profile / forced path).
@@ -257,7 +271,9 @@ class ScoringEngine:
                  breaker_cooldown_s: float = 30.0,
                  clock: Callable[[], float] = time.monotonic,
                  recorder: TraceRecorder | None = None,
-                 planner: str = "measured"):
+                 planner: str = "measured",
+                 runtime=None,
+                 grad_fn=None):
         if path != "auto" and path not in PATHS:
             raise ValueError(f"unknown path {path!r}; expected 'auto' or one "
                              f"of {PATHS}")
@@ -294,8 +310,30 @@ class ScoringEngine:
         self._ref_fn: Callable | None = None
         self._embed_ref_fn: Callable | None = None
         self._head_fn: Callable | None = None
-        #: jitted value_and_grad executors, one per (train path, accum).
-        self._train_fns: dict[tuple[str, int], Callable] = {}
+        #: jitted value_and_grad executors, one per
+        #: (train path, chunk, devices, grad-fn kind).
+        self._train_fns: dict[tuple, Callable] = {}
+        # ---- device-sharded execution (DESIGN.md §16) ----
+        #: mesh + axis-role bundle (`distributed.sharding.Runtime`); None
+        #: (or a mesh-less Runtime) keeps every path single-device — the
+        #: engine then behaves bit-identically to its pre-mesh self.
+        self.runtime = runtime
+        self.n_devices = (int(runtime.n_devices)
+                          if runtime is not None else 1)
+        #: per-(path, device-count, tile_block) shard_map executables — the
+        #: sharded twin of `bucket_fns` (jit caches per padded shape inside
+        #: each entry).
+        self._sharded_fns: dict[tuple[str, int, int], Callable] = {}
+        #: sub-meshes over the first k mesh devices, built lazily (the §12
+        #: collapse rung and the planner's pair-count clamp both shrink k).
+        self._tile_meshes: dict[int, object] = {}
+        #: swappable gradient-function object (train/sgf.py, paxml-style):
+        #: wraps loss -> value_and_grad so clipped / DP variants slot into
+        #: `loss_and_grad` without touching the executor cache logic.
+        if grad_fn is None:
+            from repro.train.sgf import StandardGradient
+            grad_fn = StandardGradient()
+        self.grad_fn = grad_fn
         #: realized COO overflow budget of past sparse packs — reused as the
         #: floor of later packs so one heavy batch doesn't make every
         #: subsequent batch re-derive (and re-compile) a different [T, E_ov]
@@ -477,11 +515,16 @@ class ScoringEngine:
         model = self._cost_model()
         if model is None:
             return None
+        # Candidate keys carry the device count the planner would actually
+        # assign (profile.cost_key): an 8-device wall must never predict a
+        # single-device call or vice versa (DESIGN.md §16).
         if train:
-            cand = {p: f"train:{p}" for p in TRAIN_PATHS}
+            cand = {p: cost_key(f"train:{p}", self._plan_devices(p, stats))
+                    for p in TRAIN_PATHS}
         else:
-            cand = {p: p for p in ("bucketed_mega", "packed_dense",
-                                   "packed_sparse")}
+            cand = {p: cost_key(p, self._plan_devices(p, stats))
+                    for p in ("bucketed_mega", "packed_dense",
+                              "packed_sparse")}
             if keys_known:
                 cand["embedding_cache"] = "embedding_cache"
         if not model.supports(cand.values()):
@@ -494,9 +537,59 @@ class ScoringEngine:
             est[path] = model.predict(key, feats)
         return est
 
+    def _plan_devices(self, path: str, stats: WorkloadStats) -> int:
+        """Mesh devices to assign a call's packed tiles to (DESIGN.md §16).
+
+        Only the packed paths shard (their [T, ...] tile axis is the
+        partition unit); the count halves until every device owns at least
+        `MIN_PACK_PAIRS` pairs — a 3-pair call on an 8-device mesh runs
+        single-device rather than shipping near-empty tiles to 7 chips.
+        """
+        nd = self.n_devices
+        if nd <= 1 or path not in PACKED_PATHS:
+            return 1
+        while nd > 1 and stats.n_pairs < nd * self.MIN_PACK_PAIRS:
+            nd //= 2
+        return max(nd, 1)
+
+    def _tile_mesh(self, devices: int):
+        """1-D tile mesh over the first `devices` devices of the runtime
+        mesh (cached: shard_map closures keep mesh identity stable)."""
+        from jax.sharding import Mesh
+
+        from repro.distributed.sharding import TILE_AXIS
+
+        mesh = self._tile_meshes.get(devices)
+        if mesh is None:
+            devs = self.runtime.mesh.devices.reshape(-1)[:devices]
+            mesh = Mesh(devs, (TILE_AXIS,))
+            self._tile_meshes[devices] = mesh
+        return mesh
+
+    def _sharded_fn(self, path: str, devices: int,
+                    tile_block: int) -> Callable:
+        """Jitted shard_map executor for a packed path at a
+        (device count, tile_block) — the per-shape-class executable cache
+        the §16 refactor replaces the single global wrappers with.
+        tile_block comes from `ops.sharded_tile_plan`, which
+        balance-shrinks it so few tiles spread over many devices."""
+        key = (path, devices, tile_block)
+        fn = self._sharded_fns.get(key)
+        if fn is None:
+            from repro.kernels import ops
+
+            build = (ops.build_pair_score_sparse_sharded
+                     if path == "packed_sparse"
+                     else ops.build_pair_score_packed_sharded)
+            fn, _ = build(self._tile_mesh(devices), self.node_budget,
+                          tile_block=tile_block)
+            self._sharded_fns[key] = fn
+        return fn
+
     def _record_trace(self, kind: str, path: str, n_pairs: int,
                       plan: ScorePlan, wall_s: float, *,
-                      degraded: Sequence[str] = (), attempts: int = 1):
+                      degraded: Sequence[str] = (), attempts: int = 1,
+                      n_devices: int = 1):
         """Append one executed work item to the trace ring (DESIGN.md §15).
         Routed through the §12 fault seam (site "profile") and guarded:
         a failing recorder must never fail the scoring call it observes."""
@@ -516,7 +609,7 @@ class ScoringEngine:
                 density=plan.stats.density, occupancy=occ,
                 to_embed=len(plan.to_embed_idx),
                 degraded_from=list(degraded), attempts=int(attempts),
-                wall_s=float(wall_s)))
+                wall_s=float(wall_s), n_devices=int(n_devices)))
         except Exception:
             self.counters["profile_record_errors"] += 1
 
@@ -615,7 +708,8 @@ class ScoringEngine:
                          fit_idx=fit_idx, over_idx=over_idx, stats=stats,
                          reason=reason, cached_idx=cached_idx,
                          to_embed_idx=to_embed_idx, graph_keys=keys,
-                         quarantined=quarantined, cost_estimates=est)
+                         quarantined=quarantined, cost_estimates=est,
+                         devices=self._plan_devices(path, stats))
 
     # ------------------------------------------------------------ execution
 
@@ -686,6 +780,61 @@ class ScoringEngine:
         self.last_pack_stats = pstats
         out[idx] = unpack_pair_scores(s, packed, len(pairs))
 
+    @staticmethod
+    def _packed_score_arrays(packed, sparse: bool) -> tuple:
+        """The positional array tuple a packed megakernel takes, in kernel
+        order (shared by the sharded executors and `kernels.ops`)."""
+        if sparse:
+            e1, e2 = packed.edges.edges1, packed.edges.edges2
+            o1, o2 = packed.edges.overflow1, packed.edges.overflow2
+            return (e1.senders, e1.weights,
+                    o1.senders, o1.receivers, o1.weights,
+                    packed.labels1, packed.mask1, packed.seg1,
+                    e2.senders, e2.weights,
+                    o2.senders, o2.receivers, o2.weights,
+                    packed.labels2, packed.mask2, packed.seg2,
+                    packed.pair_mask)
+        return (packed.adj1, packed.labels1, packed.mask1, packed.seg1,
+                packed.adj2, packed.labels2, packed.mask2, packed.seg2,
+                packed.pair_mask)
+
+    def _score_packed_sharded(self, pairs, idx: np.ndarray, out: np.ndarray,
+                              sparse: bool, stats: WorkloadStats,
+                              devices: int):
+        """Packed scoring with the tile axis sharded over `devices` mesh
+        devices (DESIGN.md §16): pack host-side exactly as the unsharded
+        executor, pad T to a power-of-two >= devices x tile_block, run the
+        shard_map executor, gather [T, P] scores host-side. The fault site
+        is `sharded:<path>` — a dead shard surfaces here and the §12 ladder
+        collapses the call to the single-device rung."""
+        from repro.core.batching import pack_pairs, unpack_pair_scores
+        from repro.kernels import ops
+
+        path = "packed_sparse" if sparse else "packed_dense"
+        slots = max(8, self.node_budget // 4)
+        if sparse:
+            packed, pstats = self._pack_sparse(pairs, slots, stats.avg_degree)
+        else:
+            packed, pstats = pack_pairs(pairs, self.node_budget,
+                                        slots_per_tile=slots)
+        t = packed.mask1.shape[0]
+        target, tile_block = ops.sharded_tile_plan(
+            t, self.node_budget, devices, sparse=sparse)
+        fn = self._sharded_fn(path, devices, tile_block)
+        arrays = [ops._pad_batch(x, target)[0]
+                  for x in self._packed_score_arrays(packed, sparse)]
+        s = _call(f"sharded:{path}",
+                  lambda: fn(self.params, *arrays))[:t]
+        span = target // devices
+        self.last_pack_stats = dict(
+            pstats, devices=devices, tiles=t, tiles_padded=target,
+            # live-tile fraction of each device's span (pad tiles append at
+            # the end, so trailing devices absorb the padding waste).
+            device_occupancy=[
+                max(0, min(t - d * span, span)) / span
+                for d in range(devices)])
+        out[idx] = unpack_pair_scores(s, packed, len(pairs))
+
     def _pack_sparse(self, pairs, slots: int, avg_degree: float):
         """Shared sparse packing (scoring + training): ladder-sized edge
         budget, with the engine's realized overflow budget from earlier
@@ -725,9 +874,13 @@ class ScoringEngine:
                 cooldown_s=self.breaker_cooldown_s, clock=self._clock)
         return br
 
-    def _execute_rung(self, rung: str, sub, idx: np.ndarray,
+    def _execute_rung(self, rung: str, devices: int, sub, idx: np.ndarray,
                       out: np.ndarray, plan: ScorePlan):
-        if rung in PACKED_PATHS:
+        if rung in PACKED_PATHS and devices > 1:
+            self._score_packed_sharded(sub, idx, out,
+                                       rung == "packed_sparse",
+                                       plan.stats, devices)
+        elif rung in PACKED_PATHS:
             self._score_packed(sub, idx, out, rung == "packed_sparse",
                                plan.stats)
         elif rung == "embedding_cache":
@@ -735,50 +888,69 @@ class ScoringEngine:
         else:
             self._score_bucketed(sub, idx, out, flavor=rung)
 
+    def _ladder_rungs(self, start: str, devices: int,
+                      ladder: dict) -> tuple:
+        """(path, devices) rung sequence for one work item: the planned
+        rung first; for a sharded start the SECOND rung is the same path
+        collapsed to a single device (DESIGN.md §16 — a bad shard costs the
+        mesh, never the batch), then the ordinary single-device ladder.
+        degrade=False pins the call to its planned rung as before."""
+        if not self.degrade:
+            return ((start, devices),)
+        rungs = [(start, devices)]
+        if devices > 1:
+            rungs.append((start, 1))
+        rungs.extend((r, 1) for r in ladder.get(start, ()))
+        return tuple(rungs)
+
     def _run_score_ladder(self, start: str, sub, idx: np.ndarray,
                           out: np.ndarray, plan: ScorePlan
-                          ) -> tuple[int, list]:
+                          ) -> tuple[int, list, str, int]:
         """Execute one work item (a pair subset) starting at `start`,
         stepping down `DEGRADE_LADDER` on failure (DESIGN.md §12).
 
         A rung fails by raising OR by producing non-finite scores for
         validated inputs (a silently-corrupting kernel). Each non-reference
-        rung is guarded by its (path, shape-class) breaker: while open, the
-        rung is skipped outright and the next rung serves (the cool-down);
-        once half-open, one probe runs. The terminal reference rung has no
-        breaker and no finite check — by then NaN means the *model* is
-        non-finite, which quarantine cannot rule out and retries cannot fix.
-        Returns (attempts, degraded-rung names, the rung that served);
-        re-raises only if every rung failed.
+        rung is guarded by its (rung-name, shape-class) breaker — sharded
+        rungs breaker separately from their single-device twin, so a mesh
+        with one persistently dead shard cools down while single-device
+        keeps serving. While open, the rung is skipped outright and the
+        next rung serves; once half-open, one probe runs. The terminal
+        reference rung has no breaker and no finite check — by then NaN
+        means the *model* is non-finite, which quarantine cannot rule out
+        and retries cannot fix. Returns (attempts, degraded-rung names,
+        the path that served, the device count it served at); re-raises
+        only if every rung failed.
         """
-        rungs = (start,) + (DEGRADE_LADDER.get(start, ())
-                            if self.degrade else ())
+        devices = plan.devices if start == plan.path else 1
+        rungs = self._ladder_rungs(start, devices, DEGRADE_LADDER)
         sc = self._shape_class(plan.stats)
         degraded: list[str] = []
         attempts = 0
         last_err: Exception | None = None
-        for rung in rungs:
+        for rung, nd in rungs:
+            name = _rung_name(rung, nd)
             terminal = rung == "reference"
-            br = None if terminal else self._breaker(rung, sc)
+            br = None if terminal else self._breaker(name, sc)
             if br is not None and not br.allow():
-                self.counters[f"breaker_rejected:{rung}"] += 1
-                degraded.append(rung)
+                self.counters[f"breaker_rejected:{name}"] += 1
+                degraded.append(name)
                 continue
             attempts += 1
             try:
-                self._execute_rung(rung, sub, idx, out, plan)
+                self._execute_rung(rung, nd, sub, idx, out, plan)
                 if not terminal and not np.isfinite(out[idx]).all():
                     raise NonFiniteOutput(
-                        f"{rung} produced non-finite scores for validated "
+                        f"{name} produced non-finite scores for validated "
                         "inputs")
                 if br is not None:
                     br.record_success()
-                return attempts, degraded, rung
+                return attempts, degraded, rung, nd
             except Exception as exc:
                 if br is not None:
                     br.record_failure()
-                self.counters[f"errors:{rung}"] += 1
-                degraded.append(rung)
+                self.counters[f"errors:{name}"] += 1
+                degraded.append(name)
                 last_err = exc
                 if rung in PACKED_PATHS:
                     self.last_pack_stats = None   # stats of a failed attempt
@@ -812,15 +984,27 @@ class ScoringEngine:
 
     # -------------------------------------------------------- training path
 
-    def _train_fn(self, path: str, chunk_tiles: int) -> Callable:
-        """One jitted value_and_grad executor per (train path, chunk size) —
-        cached on the engine like `bucket_fns`, so a training loop reuses
-        one executable per padded shape. The function maps
-        (params, targets, *arrays) -> (sum of squared errors, d/dparams),
-        scanning `chunk_tiles`-tile chunks of the packed batch (cache
-        blocking AND accumulation microbatching in one mechanism — the
-        packed planes are packed once and only the scan slice moves)."""
-        key = (path, chunk_tiles)
+    def _train_fn(self, path: str, chunk_tiles: int,
+                  devices: int = 1) -> Callable:
+        """One jitted value_and_grad executor per (train path, chunk size,
+        device count, gradient-function kind) — cached on the engine like
+        `bucket_fns`, so a training loop reuses one executable per padded
+        shape. The function maps (params, targets, *arrays) -> (sum of
+        squared errors, d/dparams), scanning `chunk_tiles`-tile chunks of
+        the packed batch (cache blocking AND accumulation microbatching in
+        one mechanism — the packed planes are packed once and only the scan
+        slice moves).
+
+        The raw loss -> value_and_grad transform is delegated to the
+        engine's swappable `grad_fn` object (`train/sgf.py`, paxml-style),
+        so clipped / DP variants change the executor without touching this
+        cache logic. With `devices > 1` the whole chunk-scan runs under
+        shard_map — each device scans only its tile span — and loss + grad
+        tree are `psum`-reduced over the tile axis (DESIGN.md §16), OUTSIDE
+        the grad object: per-microbatch transforms compose with the
+        cross-device reduction unchanged.
+        """
+        key = (path, chunk_tiles, devices, self.grad_fn.cache_key)
         if key not in self._train_fns:
             import jax.numpy as jnp
 
@@ -841,7 +1025,7 @@ class ScoringEngine:
                     # Pad pair slots score exact zero against target zero.
                     return jnp.sum((score_fn(params, *arrays) - tgt) ** 2)
 
-            grad_fn = jax.value_and_grad(sse)
+            grad_fn = self.grad_fn.value_and_grad(sse)
             if path == "reference":
                 fn = grad_fn
             else:
@@ -866,17 +1050,37 @@ class ScoringEngine:
                                 params))
                     (s, g), _ = jax.lax.scan(micro, zero, xs)
                     return s, g
+                if devices > 1:
+                    from jax.experimental.shard_map import shard_map
+                    from jax.sharding import PartitionSpec as P
+
+                    from repro.distributed.sharding import TILE_AXIS
+
+                    n_arrays = 17 if path == "packed_sparse" else 9
+                    scan = fn
+
+                    def local(params, tgt, *arrays):
+                        return jax.lax.psum(scan(params, tgt, *arrays),
+                                            TILE_AXIS)
+                    fn = shard_map(
+                        local, mesh=self._tile_mesh(devices),
+                        in_specs=(P(), P(TILE_AXIS))
+                        + (P(TILE_AXIS),) * n_arrays,
+                        out_specs=P(), check_rep=False)
             self._train_fns[key] = jax.jit(fn)
         return self._train_fns[key]
 
     def _packed_sse(self, params, fit_pairs, fit_targets: np.ndarray,
                     plan: ScorePlan, accum_steps: int,
-                    path: str | None = None):
+                    path: str | None = None, devices: int = 1):
         """Sum-of-squared-errors + grads of the packed fit split: pack ONCE,
         scatter targets to [T, P] pair slots, pad the tile axis to a chunk
         multiple (pad tiles are all-zero: exact-zero scores, targets and
         grads), run the chunk-scanning custom-VJP executor. `path` defaults
-        to the planned path; the train ladder passes the current rung."""
+        to the planned path; the train ladder passes the current rung.
+        With `devices > 1` the tile axis pads to a devices x chunk multiple
+        and runs the shard_map + psum executor (DESIGN.md §16) under the
+        `sharded:train:<path>` fault site."""
         import jax.numpy as jnp
 
         from repro.core.batching import next_pow2, pack_pairs
@@ -902,12 +1106,14 @@ class ScoringEngine:
         # Chunk small enough that accum_steps chunks exist and that padding
         # never exceeds the batch itself (all powers of two), then pad T to
         # a chunk multiple — bounded pad-tile waste (< one chunk) vs. up to
-        # 2x for power-of-two T quantization.
+        # 2x for power-of-two T quantization. Sharded calls pad to a
+        # devices x chunk multiple instead, so every device scans whole
+        # chunks of its tile span.
         t = pair_mask.shape[0]
         chunk_tiles = min(self.TRAIN_TILE_CHUNK, next_pow2(t, floor=1))
         while chunk_tiles > 1 and (-(-t // chunk_tiles)) < accum_steps:
             chunk_tiles //= 2
-        pad = (-t) % chunk_tiles
+        pad = (-t) % (chunk_tiles * max(devices, 1))
 
         def pad_tiles(x):
             if not pad:
@@ -917,8 +1123,13 @@ class ScoringEngine:
 
         arrays = tuple(pad_tiles(x)
                        for x in kgrad.packed_arrays(packed, sparse=sparse))
-        fn = self._train_fn(path, chunk_tiles)
-        return _call(f"train:{path}",
+        if devices > 1:
+            self.last_pack_stats = dict(pstats, devices=devices, tiles=t,
+                                        tiles_padded=t + pad)
+        fn = self._train_fn(path, chunk_tiles, devices)
+        site = (f"sharded:train:{path}" if devices > 1
+                else f"train:{path}")
+        return _call(site,
                      lambda: fn(params, pad_tiles(jnp.asarray(tgt)),
                                 *arrays))
 
@@ -955,40 +1166,45 @@ class ScoringEngine:
         rungs that emit non-finite loss/grads for finite targets fail like
         crashes; the reference rung serves whatever it computes (a NaN
         there is the model's, and `train.step` skips the update).
-        Returns (sse, grads, attempts, degraded, the rung that served)."""
-        rungs = (start,) + (TRAIN_DEGRADE_LADDER.get(start, ())
-                            if self.degrade else ())
+        Like the score ladder, a sharded start collapses to its
+        single-device twin before crossing paths (DESIGN.md §16). Returns
+        (sse, grads, attempts, degraded, the path that served, the device
+        count it served at)."""
+        devices = plan.devices if start == plan.path else 1
+        rungs = self._ladder_rungs(start, devices, TRAIN_DEGRADE_LADDER)
         sc = self._shape_class(plan.stats)
         degraded: list[str] = []
         attempts = 0
         last_err: Exception | None = None
-        for rung in rungs:
+        for rung, nd in rungs:
+            name = _rung_name(rung, nd)
             terminal = rung == "reference"
             br = (None if terminal
-                  else self._breaker(f"train:{rung}", sc))
+                  else self._breaker(f"train:{name}", sc))
             if br is not None and not br.allow():
-                self.counters[f"breaker_rejected:train:{rung}"] += 1
-                degraded.append(rung)
+                self.counters[f"breaker_rejected:train:{name}"] += 1
+                degraded.append(name)
                 continue
             attempts += 1
             try:
                 if rung in PACKED_PATHS:
                     s, g = self._packed_sse(params, sub, tgt, plan,
-                                            accum_steps, path=rung)
+                                            accum_steps, path=rung,
+                                            devices=nd)
                 else:
                     s, g = self._reference_sse(params, sub, tgt)
                 if not terminal and not tree_all_finite(s, g):
                     raise NonFiniteOutput(
-                        f"train:{rung} produced non-finite loss/grads for "
+                        f"train:{name} produced non-finite loss/grads for "
                         "finite targets")
                 if br is not None:
                     br.record_success()
-                return s, g, attempts, degraded, rung
+                return s, g, attempts, degraded, rung, nd
             except Exception as exc:
                 if br is not None:
                     br.record_failure()
-                self.counters[f"errors:train:{rung}"] += 1
-                degraded.append(rung)
+                self.counters[f"errors:train:{name}"] += 1
+                degraded.append(name)
                 last_err = exc
                 if rung in PACKED_PATHS:
                     self.last_pack_stats = None
@@ -1058,12 +1274,13 @@ class ScoringEngine:
             if not len(idx):
                 continue
             t0 = self._clock()
-            s, g, a, d, rung = self._run_train_ladder(
+            s, g, a, d, rung, nd = self._run_train_ladder(
                 start, params, [pairs[i] for i in idx], targets[idx],
                 plan, accum_steps)
             jax.block_until_ready(g)
             self._record_trace("train", f"train:{rung}", len(idx), plan,
-                               self._clock() - t0, degraded=d, attempts=a)
+                               self._clock() - t0, degraded=d, attempts=a,
+                               n_devices=nd)
             sse = sse + s
             grads = jax.tree.map(jnp.add, grads, g)
             attempts += a
@@ -1327,11 +1544,11 @@ class ScoringEngine:
                 if not len(idx):
                     continue
                 t0 = self._clock()
-                a, d, rung = self._run_score_ladder(
+                a, d, rung, nd = self._run_score_ladder(
                     start, [pairs[i] for i in idx], idx, out, plan)
                 self._record_trace("score", rung, len(idx), plan,
                                    self._clock() - t0, degraded=d,
-                                   attempts=a)
+                                   attempts=a, n_devices=nd)
                 attempts += a
                 degraded.extend(d)
             self.last_plan = replace(plan, degraded_from=tuple(degraded),

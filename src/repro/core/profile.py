@@ -24,8 +24,12 @@ module turns those constants into data:
 
 Profile format (one JSON object per line):
 
-    line 0:  {"profile_format_version": 1, "schema_digest": "<hex>"}
+    line 0:  {"profile_format_version": 2, "schema_digest": "<hex>"}
     line 1+: one record with EXACTLY the `TRACE_SCHEMA` fields
+
+Version 1 profiles (no `n_devices` field) are still read — their records
+are facts about single-device runs, so `n_devices=1` — and upgrade to v2
+in place on the next flush.
 
 `schema_digest()` pins the record schema the way the `graph_key` golden
 hashes pin the WL hash (tests/test_cache.py): a reader either understands
@@ -51,8 +55,11 @@ from repro.core.store import StoreError, atomic_write_bytes
 
 #: Bump when `TRACE_SCHEMA` changes shape or meaning. Readers refuse any
 #: other version (ProfileError) instead of guessing — a mis-parsed latency
-#: sample silently steers every later dispatch decision.
-PROFILE_FORMAT_VERSION = 1
+#: sample silently steers every later dispatch decision. v2 added
+#: `n_devices` (DESIGN.md §16): v1 profiles are still read (every v1 record
+#: ran single-device, so `n_devices=1` is a fact, not a guess) and are
+#: upgraded to v2 in place on the next flush.
+PROFILE_FORMAT_VERSION = 2
 
 #: The versioned record schema: (field, json-type) in canonical order.
 #: `schema_digest()` hashes this, so ANY rename / retype / reorder changes
@@ -71,7 +78,11 @@ TRACE_SCHEMA = (
     ("attempts", "int"),       # executor invocations tried
     ("wall_s", "float"),       # measured wall seconds (injectable clock)
     ("seq", "int"),            # recorder-assigned sequence number
+    ("n_devices", "int"),      # mesh devices the call ran on (v2; v1 -> 1)
 )
+
+#: The v1 schema (everything before `n_devices`), kept so v1 profiles load.
+_V1_SCHEMA = TRACE_SCHEMA[:-1]
 
 _TYPE_CHECK = {
     "str": lambda v: isinstance(v, str),
@@ -82,14 +93,24 @@ _TYPE_CHECK = {
 }
 
 
+def _digest_of(version: int, schema: tuple) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(version).encode())
+    for name, typ in schema:
+        h.update(f"{name}:{typ};".encode())
+    return h.hexdigest()
+
+
 def schema_digest() -> str:
     """blake2b-128 hex of (format version, schema) — the golden-pinned
     format contract for persisted profiles."""
-    h = hashlib.blake2b(digest_size=16)
-    h.update(str(PROFILE_FORMAT_VERSION).encode())
-    for name, typ in TRACE_SCHEMA:
-        h.update(f"{name}:{typ};".encode())
-    return h.hexdigest()
+    return _digest_of(PROFILE_FORMAT_VERSION, TRACE_SCHEMA)
+
+
+def v1_schema_digest() -> str:
+    """Digest of the retired v1 schema — what a v1 header must carry for
+    this reader to accept (and upgrade) it."""
+    return _digest_of(1, _V1_SCHEMA)
 
 
 class ProfileError(StoreError):
@@ -116,6 +137,7 @@ class TraceRecord:
     attempts: int
     wall_s: float
     seq: int
+    n_devices: int = 1        # v2 field; defaulted LAST so v1 loads fill it
 
     def to_json(self) -> str:
         d = asdict(self)
@@ -124,11 +146,17 @@ class TraceRecord:
 
     @classmethod
     def from_dict(cls, d: dict) -> "TraceRecord":
-        """Strict schema validation: exactly the schema fields, each of its
-        declared JSON type. Anything else is a garbled/foreign line."""
-        if not isinstance(d, dict) or set(d) != {n for n, _ in TRACE_SCHEMA}:
-            raise ValueError(f"record fields {sorted(d)!r} != schema"
-                             if isinstance(d, dict) else "record not an object")
+        """Strict schema validation: exactly the v2 schema fields — or
+        exactly the v1 fields, in which case `n_devices=1` is filled in
+        (every v1 record ran single-device). Anything else is a
+        garbled/foreign line."""
+        if not isinstance(d, dict):
+            raise ValueError("record not an object")
+        names = {n for n, _ in TRACE_SCHEMA}
+        if set(d) == {n for n, _ in _V1_SCHEMA}:
+            d = dict(d, n_devices=1)
+        elif set(d) != names:
+            raise ValueError(f"record fields {sorted(d)!r} != schema")
         for name, typ in TRACE_SCHEMA:
             if not _TYPE_CHECK[typ](d[name]):
                 raise ValueError(f"field {name!r} is not {typ}")
@@ -153,15 +181,16 @@ def _check_header(line: str, path: str) -> None:
     if not isinstance(head, dict):
         raise ProfileError(f"profile header at {path} is not an object")
     version = head.get("profile_format_version")
-    if version != PROFILE_FORMAT_VERSION:
+    if version not in (1, PROFILE_FORMAT_VERSION):
         raise ProfileError(
             f"profile format version {version!r} != supported "
-            f"{PROFILE_FORMAT_VERSION} at {path}: refusing to guess the "
-            "record schema")
+            f"{{1, {PROFILE_FORMAT_VERSION}}} at {path}: refusing to guess "
+            "the record schema")
     digest = head.get("schema_digest")
-    if digest != schema_digest():
+    want = v1_schema_digest() if version == 1 else schema_digest()
+    if digest != want:
         raise ProfileError(
-            f"profile schema digest {digest!r} != {schema_digest()!r} at "
+            f"profile schema digest {digest!r} != {want!r} at "
             f"{path}: the record schema changed without a version bump — "
             "refusing to mis-parse")
 
@@ -202,7 +231,8 @@ class TraceRecorder:
                mean_nodes: float, avg_degree: float, density: float,
                occupancy: float = 0.0, to_embed: int = 0,
                degraded_from: Sequence[str] = (), attempts: int = 1,
-               wall_s: float = 0.0) -> TraceRecord | None:
+               wall_s: float = 0.0, n_devices: int = 1
+               ) -> TraceRecord | None:
         """Append one record; returns it, or None if recording failed
         (counted, swallowed — observability must not take down serving)."""
         try:
@@ -212,7 +242,8 @@ class TraceRecorder:
                 avg_degree=float(avg_degree), density=float(density),
                 occupancy=float(occupancy), to_embed=int(to_embed),
                 degraded_from=tuple(str(d) for d in degraded_from),
-                attempts=int(attempts), wall_s=float(wall_s), seq=self._seq)
+                attempts=int(attempts), wall_s=float(wall_s), seq=self._seq,
+                n_devices=int(n_devices))
             self._seq += 1
             self._ring.append(rec)
             self._pending.append(rec)
@@ -235,10 +266,12 @@ class TraceRecorder:
     # ---------------------------------------------------------- persistence
 
     def _read_valid_lines(self, path: str) -> list[str]:
-        """Existing profile's record lines that still parse + validate;
-        damaged lines (torn tail, bit rot) are dropped-and-counted. A bad
-        HEADER raises ProfileError — appending to a profile of unknown
-        schema would poison every future reader."""
+        """Existing profile's record lines that still parse + validate,
+        re-serialized in the CURRENT schema (so a v1 profile upgrades to v2
+        on the next flush — `n_devices=1` filled in); damaged lines (torn
+        tail, bit rot) are dropped-and-counted. A bad HEADER raises
+        ProfileError — appending to a profile of unknown schema would
+        poison every future reader."""
         with open(path, "rb") as f:
             raw = f.read().decode("utf-8", errors="replace")
         lines = [ln for ln in raw.split("\n") if ln.strip()]
@@ -248,8 +281,7 @@ class TraceRecorder:
         keep = []
         for ln in lines[1:]:
             try:
-                TraceRecord.from_dict(json.loads(ln))
-                keep.append(ln)
+                keep.append(TraceRecord.from_dict(json.loads(ln)).to_json())
             except (ValueError, TypeError):
                 self.counters["records_dropped"] += 1
         return keep
@@ -326,6 +358,15 @@ def _record_features(r: TraceRecord) -> np.ndarray:
     return trace_features(r.n_pairs, r.mean_nodes, r.avg_degree, r.to_embed)
 
 
+def cost_key(path: str, n_devices: int = 1) -> str:
+    """Cost-model group key: multi-device walls live under `path@Nd` so the
+    planner never mixes single- and multi-device latency samples (a 2-device
+    wall predicting a 1-device call would bias every dispatch). Single-device
+    keys stay the bare path — v1 profiles keep fitting unchanged."""
+    n = int(n_devices)
+    return path if n <= 1 else f"{path}@{n}d"
+
+
 @dataclass(frozen=True)
 class CostModel:
     """Per-path ridge fit latency model: weights over `FEATURE_NAMES`,
@@ -371,7 +412,7 @@ def fit_cost_model(records: Sequence[TraceRecord], *, min_support: int = 8,
     by_path: dict[str, list[TraceRecord]] = {}
     for r in records:
         if r.wall_s > 0.0 and not r.degraded_from:
-            by_path.setdefault(r.path, []).append(r)
+            by_path.setdefault(cost_key(r.path, r.n_devices), []).append(r)
     weights: dict[str, np.ndarray] = {}
     support: dict[str, int] = {}
     residual: dict[str, float] = {}

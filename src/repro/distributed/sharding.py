@@ -15,12 +15,56 @@ replicated. `None` mesh (single-CPU tests) makes every helper a no-op.
 
 from __future__ import annotations
 
+import os
 import re
 from dataclasses import dataclass, field
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Axis name for the packed-tile data-parallel mesh (DESIGN.md §16): the
+# [T, ...] leading dim of packed pair tiles, train chunk-scans, and the
+# §14 prefilter's corpus spans are all sharded over this one axis.
+TILE_AXIS = "tile"
+
+_HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int) -> int:
+    """Opt in to `n` simulated host (CPU) devices, before first backend use.
+
+    Appends `--xla_force_host_platform_device_count=n` to XLA_FLAGS unless a
+    count is already present (so CI / callers that pre-set the env win), then
+    returns the realized `jax.local_device_count()`. Must run before JAX
+    initializes its backends — the count locks on first device query. If the
+    backend initialized earlier with a different count, the realized count is
+    returned as-is; callers that need exactly `n` should check the return.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _HOST_COUNT_FLAG not in flags:
+        os.environ["XLA_FLAGS"] = (
+            (flags + " " if flags else "") + f"{_HOST_COUNT_FLAG}={int(n)}")
+    return jax.local_device_count()
+
+
+def tile_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D mesh over TILE_AXIS spanning the first `n_devices` local devices
+    (all of them when None). A subset mesh is legal — this is what lets one
+    8-device pytest process exercise device_count ∈ {1, 2, 8}."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"tile_mesh: requested {n} devices, have {len(devs)} "
+            f"(use force_host_device_count() before first JAX use)")
+    return Mesh(np.asarray(devs[:n]), (TILE_AXIS,))
+
+
+def tile_runtime(n_devices: int | None = None) -> Runtime:
+    """Runtime whose mesh is a 1-D tile mesh — the object threaded into
+    `ScoringEngine(runtime=...)` and the search server."""
+    return Runtime(mesh=tile_mesh(n_devices))
 
 # (regex over '/'-joined path, base spec for the *unstacked* param)
 _PARAM_RULES: list[tuple[str, tuple]] = [

@@ -26,10 +26,13 @@ For SimGNN pair scoring there are four kernel paths (path selection lives in
 
 from __future__ import annotations
 
+import functools
 import math
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels.flash_attn import flash_attention
 from repro.kernels.fused_gcn import fused_gcn_att
@@ -48,7 +51,11 @@ __all__ = ["flash_attention", "wkv6", "graph_embeddings_fused",
            "pair_score_packed", "packed_node_budget", "packed_tile_block",
            "pair_score_sparse", "packed_edge_budget", "sparse_tile_block",
            "blocked_topm", "blocked_topm_ntn", "collapse_query_ntn",
-           "retrieval_block_cols"]
+           "retrieval_block_cols", "sharded_tile_block",
+           "sharded_tile_plan",
+           "sharded_tile_target", "build_pair_score_packed_sharded",
+           "build_pair_score_sparse_sharded", "pair_score_packed_sharded",
+           "pair_score_sparse_sharded"]
 
 
 def _pad_batch(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
@@ -262,3 +269,167 @@ def pair_score_sparse(params, packed, *, tile_block: int | None = None,
                             params["ntn"], params["fcn"],
                             tile_block=tile_block, interpret=interpret)
     return out[:t]
+
+
+# ---------------------------------------------------------------------------
+# Device-sharded packed scoring (DESIGN.md §16): the [T, ...] tile axis is
+# the data-parallel unit — shard it over a 1-D `tile` mesh, run the SAME
+# packed megakernel per device on its tile span, gather scores host-side.
+# Params ride in replicated (P()); the kernel body is unchanged, so per-tile
+# results are bitwise products of the same program as the unsharded call.
+#
+# All sharded shape policy is pure powers of two (tile_block, padded tile
+# count, device count), so every device count's per-device span is a whole
+# number of identical tile_block programs, and the per-tile results stay
+# bitwise-reproducible across device counts: the kernels are
+# tile_block-invariant (each tile's reductions are within-tile; pinned by
+# tests/test_sharded.py), so balance-shrinking tile_block to spread few
+# tiles over many devices changes only the launch grid, never the scores.
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def _pow2_ceil(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def sharded_tile_block(node_budget: int, *, sparse: bool = False) -> int:
+    """Tiles-per-program ceiling for the sharded wrappers: the
+    single-device VMEM policy rounded down to a power of two (see block
+    comment above)."""
+    tb = (sparse_tile_block if sparse else packed_tile_block)(node_budget)
+    return _pow2_floor(tb)
+
+
+def sharded_tile_plan(t: int, node_budget: int, n_devices: int, *,
+                      sparse: bool = False) -> tuple[int, int]:
+    """(padded tile count, tile_block) for a sharded call over `t` live
+    tiles: T pads to a power-of-two >= t with at least one program per
+    device, and tile_block shrinks below the VMEM policy when the mesh has
+    more parallelism than tiles — the tile -> device balance assignment
+    (20 tiles on 8 devices run as 5 devices x one 4-tile program, not one
+    device x a 32-tile program plus 7 idle)."""
+    tb = sharded_tile_block(node_budget, sparse=sparse)
+    target = _pow2_ceil(max(t, 1))
+    tb = min(tb, max(1, target // int(n_devices)))
+    return max(target, int(n_devices) * tb), tb
+
+
+def sharded_tile_target(t: int, tile_block: int, n_devices: int) -> int:
+    """Padded tile count for a sharded call: power-of-two >= t, and at least
+    one tile_block program per device."""
+    return max(_pow2_ceil(max(t, 1)), int(n_devices) * tile_block)
+
+
+def build_pair_score_packed_sharded(mesh: Mesh, node_budget: int, *,
+                                    tile_block: int | None = None,
+                                    interpret: bool | None = None):
+    """Returns (fn, tile_block): `fn(params, adj1, labels1, mask1, seg1,
+    adj2, labels2, mask2, seg2, pair_mask)` scoring tiles sharded over the
+    mesh's `tile` axis. Inputs must be padded to a `sharded_tile_target`
+    multiple; output is the full padded [T, P] score block (caller slices).
+    `tile_block` defaults to the VMEM policy ceiling; callers pass the
+    `sharded_tile_plan` block to balance few tiles over many devices.
+
+    check_rep=False: pallas_call carries no replication rule, and every
+    output element is tile-local anyway."""
+    from repro.distributed.sharding import TILE_AXIS
+
+    if tile_block is None:
+        tile_block = sharded_tile_block(node_budget)
+
+    def local(params, adj1, labels1, mask1, seg1,
+              adj2, labels2, mask2, seg2, pair_mask):
+        return packed_pair_score(adj1, labels1, mask1, seg1,
+                                 adj2, labels2, mask2, seg2, pair_mask,
+                                 params["gcn"], params["att"]["w"],
+                                 params["ntn"], params["fcn"],
+                                 tile_block=tile_block, interpret=interpret)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(),) + (P(TILE_AXIS),) * 9,
+                   out_specs=P(TILE_AXIS), check_rep=False)
+    return jax.jit(fn), tile_block
+
+
+def build_pair_score_sparse_sharded(mesh: Mesh, node_budget: int, *,
+                                    tile_block: int | None = None,
+                                    interpret: bool | None = None):
+    """Sparse twin of `build_pair_score_packed_sharded`: `fn(params, <17
+    packed-CSR arrays in `pair_score_sparse` order>)`, tile axis sharded."""
+    from repro.distributed.sharding import TILE_AXIS
+
+    if tile_block is None:
+        tile_block = sharded_tile_block(node_budget, sparse=True)
+
+    def local(params, *arrays):
+        return sparse_pair_score(*arrays, params["gcn"], params["att"]["w"],
+                                 params["ntn"], params["fcn"],
+                                 tile_block=tile_block, interpret=interpret)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(),) + (P(TILE_AXIS),) * 17,
+                   out_specs=P(TILE_AXIS), check_rep=False)
+    return jax.jit(fn), tile_block
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_builder_cached(mesh: Mesh, node_budget: int, sparse: bool,
+                            tile_block: int, interpret: bool | None):
+    build = (build_pair_score_sparse_sharded if sparse
+             else build_pair_score_packed_sharded)
+    return build(mesh, node_budget, tile_block=tile_block,
+                 interpret=interpret)
+
+
+def pair_score_packed_sharded(params, packed, *, mesh: Mesh,
+                              interpret: bool | None = None) -> jax.Array:
+    """Standalone sharded equivalent of `pair_score_packed` (the engine
+    holds its own per-(path, device-count, tile_block) executable cache;
+    this module cache serves tests/benchmarks). Same [T, P] output
+    contract."""
+    t = packed.adj1.shape[0]
+    target, tile_block = sharded_tile_plan(t, packed.node_budget,
+                                           mesh.devices.size)
+    fn, _ = _sharded_builder_cached(mesh, packed.node_budget,
+                                    False, tile_block, interpret)
+    arrays = [_pad_batch(x, target)[0]
+              for x in (packed.adj1, packed.labels1, packed.mask1, packed.seg1,
+                        packed.adj2, packed.labels2, packed.mask2, packed.seg2,
+                        packed.pair_mask)]
+    return fn(params, *arrays)[:t]
+
+
+def pair_score_sparse_sharded(params, packed, *, mesh: Mesh,
+                              interpret: bool | None = None) -> jax.Array:
+    """Standalone sharded equivalent of `pair_score_sparse`."""
+    from repro.core.batching import packed_pair_edges
+
+    edges = packed.edges
+    if edges is None:
+        edges = packed_pair_edges(packed,
+                                  packed_edge_budget(packed.node_budget))
+    t = packed.mask1.shape[0]
+    target, tile_block = sharded_tile_plan(t, packed.node_budget,
+                                           mesh.devices.size, sparse=True)
+    fn, _ = _sharded_builder_cached(mesh, packed.node_budget,
+                                    True, tile_block, interpret)
+    e1, e2 = edges.edges1, edges.edges2
+    o1, o2 = edges.overflow1, edges.overflow2
+    arrays = [_pad_batch(x, target)[0]
+              for x in (e1.senders, e1.weights,
+                        o1.senders, o1.receivers, o1.weights,
+                        packed.labels1, packed.mask1, packed.seg1,
+                        e2.senders, e2.weights,
+                        o2.senders, o2.receivers, o2.weights,
+                        packed.labels2, packed.mask2, packed.seg2,
+                        packed.pair_mask)]
+    return fn(params, *arrays)[:t]

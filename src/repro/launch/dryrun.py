@@ -1,10 +1,13 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-# ^ MUST precede every other import: jax locks the device count on first init.
-#   (setdefault so the in-CI smoke test can run with 8 devices instead.)
+from repro.distributed.sharding import force_host_device_count
+
+force_host_device_count(512)
+# ^ MUST precede every other import that touches devices: jax locks the count
+#   on first backend init. The helper is a no-op when XLA_FLAGS already names
+#   a count (the in-CI smoke test runs with 8 devices instead).
 
 import argparse        # noqa: E402
 import json            # noqa: E402
+import os              # noqa: E402
 import time            # noqa: E402
 import traceback       # noqa: E402
 

@@ -28,16 +28,27 @@ def train_simgnn(args):
     from repro.core.engine import ScoringEngine
     from repro.core.simgnn import init_simgnn_params
     from repro.data.graphs import pair_stream
+    from repro.distributed.sharding import (force_host_device_count,
+                                            tile_runtime)
     from repro.train.optimizer import adamw_init
     from repro.train.step import build_simgnn_train_step
     from repro.train import loop
 
+    runtime = None
+    if args.devices > 1:
+        # Data-parallel packed training (DESIGN.md §16): the engine shards
+        # each batch's tile axis over a 1-D mesh and psums the chunk-scan
+        # loss/grads. On CPU-only hosts the mesh is simulated (the opt-in
+        # host-platform XLA flag, a no-op on real accelerators) so the
+        # flag is exercisable anywhere. Must run before first backend use.
+        force_host_device_count(args.devices)
+        runtime = tile_runtime(args.devices)
     params = init_simgnn_params(jax.random.PRNGKey(args.seed), scfg)
     opt_state = adamw_init(params)
     # The engine dispatches the forward AND backward passes (DESIGN.md §11):
     # it measures each batch and picks the packed-sparse / packed-dense /
     # reference executor; the step itself contains no path selection.
-    engine = ScoringEngine(params, scfg)
+    engine = ScoringEngine(params, scfg, runtime=runtime)
     step_fn = build_simgnn_train_step(engine, peak_lr=args.lr)
     stream = pair_stream(args.seed, args.batch, max_nodes=scfg.max_nodes)
     batches = {}
@@ -134,6 +145,9 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--mesh", default="none", choices=["none", "single", "multi"])
     ap.add_argument("--compress-grads", action="store_true")
+    # simgnn only: shard packed training over N mesh devices (§16). CPU
+    # hosts simulate the mesh, so --devices 8 works on a laptop.
+    ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--simulate-failure", type=int, default=0)
     args = ap.parse_args(argv)
     if args.model == "simgnn":

@@ -203,7 +203,7 @@ def simgnn_query_server(params, cfg, *, use_kernels: bool = False,
                         path: str | None = None, cache_size: int = 4096,
                         validation: str = "lenient",
                         clock: Callable[[], float] = time.perf_counter,
-                        recorder=None):
+                        recorder=None, runtime=None):
     """Returns score_fn(list[(g1, g2)]) -> np.ndarray of similarity scores.
 
     A thin wrapper over `core.engine.ScoringEngine` (DESIGN.md §9) — no path
@@ -225,6 +225,10 @@ def simgnn_query_server(params, cfg, *, use_kernels: bool = False,
     test, and an external `core.profile.TraceRecorder` lets a caller share
     one persisted profile across servers (DESIGN.md §15).
 
+    `runtime` is forwarded to the engine (DESIGN.md §16): a multi-device
+    `distributed.sharding.Runtime` lets the planner shard packed-path tile
+    batches over the mesh; None keeps every path single-device.
+
     `validation` is forwarded to the engine (DESIGN.md §12): the default
     "lenient" quarantines malformed request graphs per pair (NaN score in
     the response, structured records on `last_plan.quarantined`) — one bad
@@ -243,7 +247,7 @@ def simgnn_query_server(params, cfg, *, use_kernels: bool = False,
                 else "reference")
     engine = ScoringEngine(params, cfg, path=path, node_budget=node_budget,
                            cache_size=cache_size, validation=validation,
-                           clock=clock, recorder=recorder)
+                           clock=clock, recorder=recorder, runtime=runtime)
 
     def score(pairs):
         out = engine.score(pairs)

@@ -111,16 +111,19 @@ class SimilaritySearchServer:
                  shard_rows: int = DEFAULT_SHARD_ROWS,
                  recall_sample_every: int = 0,
                  clock: Callable[[], float] = time.perf_counter,
-                 recorder=None):
+                 recorder=None, runtime=None):
         #: injectable timing source for every per-stage SearchStats timer
         #: (mirrors `CircuitBreaker`/`MicroBatcher`): tests drive
         #: deterministic stage seconds with a fake clock, no sleeps. The
         #: same clock feeds the engine (breaker cool-downs, trace records).
         self._clock = clock
+        #: a multi-device `distributed.sharding.Runtime` splits the
+        #: prefilter scan into per-device corpus spans (DESIGN.md §16).
         self.engine = ScoringEngine(params, cfg, path="embedding_cache",
                                     cache_size=cache_size,
                                     embed_with_kernels=embed_with_kernels,
-                                    clock=clock, recorder=recorder)
+                                    clock=clock, recorder=recorder,
+                                    runtime=runtime)
         self.corpus: list[dict] = []
         self.corpus_emb: np.ndarray | None = None
         self.stats = SearchStats()
@@ -361,22 +364,22 @@ class SimilaritySearchServer:
         self.stats.embed_seconds += t1 - t0
         calib = self._calibration()
         block = retrieval_block_cols(n, shard_rows=self.shard_rows)
+        spans = self._prefilter_spans(n, block)
         try:
             if calib["proxy"] == "linear":
                 qv = prefilter_query_vectors(
                     self.engine.params["ntn"]["w"], hq, calib)
-                _, pidx = self.engine.prefilter_topm(
-                    qv, self.corpus_emb, m, block_cols=block)
+                ntn_ops = None
             else:                                  # exact streamed NTN+FCN
+                qv = hq
                 ntn_ops = collapse_query_ntn(self.engine.params["ntn"], hq)
-                _, pidx = self.engine.prefilter_topm(
-                    hq, self.corpus_emb, m, block_cols=block,
-                    ntn_operands=ntn_ops)
+            _, pidx = self._span_topm(qv, ntn_ops, m, block, spans)
         except Exception:
-            # Degradation rung (§12/§14): a failing prefilter kernel must
-            # not fail the query — serve it through the exact full scan
-            # (query embeds are already cached, so only the head re-runs)
-            # and count the degradation for health()/dashboards.
+            # Degradation rung (§12/§14/§16): a failing prefilter kernel —
+            # including a single dead span of the sharded scan — must not
+            # fail the query: serve it through the exact full scan (query
+            # embeds are already cached, so only the head re-runs) and
+            # count the degradation for health()/dashboards.
             self.engine.counters["prefilter_degraded"] += nq
             self.stats.prefilter_degraded += nq
             return [self._exact_topk(q, k) for q in queries]
@@ -408,10 +411,54 @@ class SimilaritySearchServer:
             fit_idx=np.arange(nq), over_idx=np.empty(0, np.int64),
             stats=WorkloadStats(n_pairs=nq * m),
             reason=f"two-stage retrieval: {calib['proxy']} prefilter "
-                   f"top-{m} of {n} (block {block}), exact rerank",
-            prefilter_m=m)
+                   f"top-{m} of {n} ({len(spans)} span(s), block {block}), "
+                   "exact rerank",
+            prefilter_m=m, devices=len(spans))
         self._sample_recall(queries, k, results)
         return results
+
+    def _prefilter_spans(self, n: int, block: int) -> list[tuple[int, int]]:
+        """Contiguous corpus spans for the prefilter scan — one per device
+        of the engine's mesh (DESIGN.md §16), each a whole number of
+        `block` columns so every span's block tiles coincide with the
+        unsharded scan's. Fewer blocks than devices collapses to fewer
+        spans; a single-device engine scans the corpus as one span
+        (bit-identical to the pre-§16 behavior by construction)."""
+        n_blocks = -(-n // block)
+        n_spans = max(1, min(int(self.engine.n_devices), n_blocks))
+        per = -(-n_blocks // n_spans) * block
+        return [(lo, min(lo + per, n)) for lo in range(0, n, per)]
+
+    def _span_topm(self, qv, ntn_ops, m: int, block: int,
+                   spans: list[tuple[int, int]]) -> tuple:
+        """Per-shard prefilter: run the blocked top-M scan over each corpus
+        span, then merge the per-span shortlists host-side (§16).
+
+        The merge is associative — each span's top-min(m, span_n) is a
+        superset of its contribution to the global top-m — and selects by
+        (-score, ascending global index), exactly the tie order of the
+        kernel's running block merge (`top_k` keeps the earliest position,
+        blocks arrive in ascending order). Span scores are bitwise equal to
+        the unsharded scan's (same block tiles, same dot products), so the
+        merged survivor set — and therefore the reranked top-k — is
+        bit-identical to the single-span scan."""
+        parts = []
+        for lo, hi in spans:
+            s, i = self.engine.prefilter_topm(
+                qv, self.corpus_emb[lo:hi], min(m, hi - lo),
+                block_cols=block, ntn_operands=ntn_ops)
+            parts.append((s, i.astype(np.int64) + lo))
+        if len(parts) == 1:
+            return parts[0]
+        self.engine.counters["prefilter_span_scans"] += len(parts)
+        s = np.concatenate([p[0] for p in parts], axis=1)
+        i = np.concatenate([p[1] for p in parts], axis=1)
+        out_s = np.empty((s.shape[0], m), np.float32)
+        out_i = np.empty((s.shape[0], m), np.int64)
+        for q in range(s.shape[0]):
+            order = np.lexsort((i[q], -s[q]))[:m]
+            out_s[q], out_i[q] = s[q][order], i[q][order]
+        return out_s, out_i
 
     def _sample_recall(self, queries: list[dict], k: int,
                        results: list[tuple]) -> None:
@@ -511,6 +558,11 @@ class SimilaritySearchServer:
                                     if self.stats.recall_samples else None),
                     "block_cols": (retrieval_block_cols(
                         len(self.corpus), shard_rows=self.shard_rows)
+                        if self.corpus else None),
+                    "spans": (len(self._prefilter_spans(
+                        len(self.corpus), retrieval_block_cols(
+                            len(self.corpus),
+                            shard_rows=self.shard_rows)))
                         if self.corpus else None)}}
 
     @property

@@ -22,6 +22,12 @@ Sites are the engine's execution points:
                              search degrades to the exact full scan, §14)
     "train:packed_sparse" | "train:packed_dense" | "train:reference"
                            — loss_and_grad executor calls
+    "sharded:packed_sparse" | "sharded:packed_dense"
+                           — the multi-device shard_map score executors
+                             (§16): a dead shard surfaces here and the
+                             ladder collapses the call to single-device
+    "sharded:train:packed_sparse" | "sharded:train:packed_dense"
+                           — the multi-device psum train executors (§16)
     "profile"              — the engine's trace-record append (§15): a
                              failing recorder must never fail the scoring
                              call, only count `profile_record_errors`

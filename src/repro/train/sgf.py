@@ -1,0 +1,89 @@
+"""Stochastic gradient functions — the swappable loss -> (value, grad)
+transform the ScoringEngine's training executors are built from
+(DESIGN.md §16; the composable-SGF pattern of paxml's `sgf.py`).
+
+`ScoringEngine._train_fn` historically hard-coded `jax.value_and_grad`
+inside its jitted chunk-scan executors, which made any gradient transform
+(clipping, per-microbatch noise for DP-SGD, ghost-norm estimation) a fork
+of the executor-cache logic. Instead the engine now holds ONE gradient
+function object (`engine.grad_fn`) and asks it for the transform:
+
+    grad_fn = engine.grad_fn.value_and_grad(sse)       # inside _train_fn
+    key     = (..., engine.grad_fn.cache_key)          # executor cache key
+
+The object is pure configuration — it owns no params and no state — so it
+is safe to close over inside jitted functions, and `cache_key` keys the
+executor cache (two engines sharing a transform share executables; swapping
+the transform retraces instead of serving a stale one).
+
+Composition contract with device sharding (DESIGN.md §16): the transform is
+applied at the MICROBATCH level — inside the tile-chunk scan, before the
+cross-chunk accumulation and before the cross-device `psum`. Standard
+gradients are reduction-transparent so nothing changes; clipping variants
+therefore clip per microbatch chunk (the usual accumulation-compatible
+approximation — a single global clip would need the full-batch norm, which
+the streamed chunk-scan never materializes).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["GradientFunction", "StandardGradient", "ClippedGradient",
+           "global_norm"]
+
+
+def global_norm(tree) -> jax.Array:
+    """L2 norm over every leaf of a gradient pytree."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+
+
+@dataclass(frozen=True)
+class GradientFunction:
+    """Base transform: how a scalar loss function becomes a
+    (value, grads) function. Subclasses override `value_and_grad` and
+    extend `cache_key`; instances must stay frozen/stateless (they are
+    closed over by jitted executors and hashed into cache keys)."""
+
+    @property
+    def cache_key(self) -> str:
+        return "standard"
+
+    def value_and_grad(self, loss_fn):
+        """loss_fn(params, *args) -> scalar   becomes
+        fn(params, *args) -> (scalar, grads-like-params)."""
+        return jax.value_and_grad(loss_fn)
+
+
+@dataclass(frozen=True)
+class StandardGradient(GradientFunction):
+    """Plain `jax.value_and_grad` — the default, bit-identical to the
+    pre-SGF executors."""
+
+
+@dataclass(frozen=True)
+class ClippedGradient(GradientFunction):
+    """Per-microbatch global-norm clipping: grads whose L2 norm exceeds
+    `clip_norm` are rescaled onto the ball. The first slot-in variant the
+    SGF seam exists for (ghost-norm / DP-SGD follow the same shape: wrap
+    the transform, extend the key)."""
+    clip_norm: float = 1.0
+
+    @property
+    def cache_key(self) -> str:
+        return f"clip:{self.clip_norm:g}"
+
+    def value_and_grad(self, loss_fn):
+        vg = jax.value_and_grad(loss_fn)
+
+        def fn(params, *args):
+            v, g = vg(params, *args)
+            norm = global_norm(g)
+            scale = jnp.minimum(1.0, self.clip_norm
+                                / jnp.maximum(norm, 1e-12))
+            return v, jax.tree.map(lambda x: x * scale, g)
+        return fn

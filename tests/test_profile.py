@@ -21,7 +21,8 @@ import pytest
 from repro.core.engine import TRAIN_PATHS, ScoringEngine, WorkloadStats
 from repro.core.profile import (PROFILE_FORMAT_VERSION, ProfileError,
                                 TraceRecord, TraceRecorder, fit_cost_model,
-                                read_profile, schema_digest, trace_features)
+                                read_profile, schema_digest, trace_features,
+                                v1_schema_digest)
 from repro.core.simgnn import SimGNNConfig, init_simgnn_params
 from repro.data.graphs import random_graph
 from repro.testing import faults
@@ -33,8 +34,11 @@ PARAMS = init_simgnn_params(jax.random.PRNGKey(0), CFG)
 #: profile format contract, pinned the way tests/test_cache.py pins the
 #: WL `graph_key` hashes. If this fails you changed the record schema:
 #: bump `PROFILE_FORMAT_VERSION` so old profiles are refused loudly, then
-#: re-pin (and regenerate tests/data/golden_profile.jsonl).
-GOLDEN_SCHEMA_DIGEST = "c142c827c37d33b733ec10816d76b8c8"
+#: re-pin. The v1 digest stays pinned too — v1 profiles (the committed
+#: golden file among them) must keep loading, as `n_devices=1` facts,
+#: until the back-compat window closes.
+GOLDEN_SCHEMA_DIGEST = "24529d8af2998a3dc6305bddb4486072"
+GOLDEN_V1_SCHEMA_DIGEST = "c142c827c37d33b733ec10816d76b8c8"
 GOLDEN_PROFILE = os.path.join(os.path.dirname(__file__), "data",
                               "golden_profile.jsonl")
 
@@ -156,13 +160,14 @@ def test_auto_flush_every(tmp_path):
 
 
 def test_schema_digest_golden_pinned():
-    assert PROFILE_FORMAT_VERSION == 1
+    assert PROFILE_FORMAT_VERSION == 2
     assert schema_digest() == GOLDEN_SCHEMA_DIGEST
+    assert v1_schema_digest() == GOLDEN_V1_SCHEMA_DIGEST
 
 
 def test_golden_profile_reads_clean():
-    """The committed trace (a past run's profile) must stay readable as
-    long as the schema digest stands."""
+    """The committed trace (a past run's v1 profile) must stay readable:
+    every v1 record ran single-device, so it loads with `n_devices=1`."""
     records, dropped = read_profile(GOLDEN_PROFILE)
     assert dropped == 0
     assert [r.path for r in records] == [
@@ -171,9 +176,34 @@ def test_golden_profile_reads_clean():
         "train_step"]
     assert records[4].degraded_from == ("packed_sparse",)
     assert records[3].to_embed == 1
+    assert all(r.n_devices == 1 for r in records)
     header = json.loads(open(GOLDEN_PROFILE).readline())
+    assert header == {"profile_format_version": 1,
+                      "schema_digest": GOLDEN_V1_SCHEMA_DIGEST}
+
+
+def test_v1_profile_upgrades_to_v2_on_flush(tmp_path):
+    """Appending to a v1 profile rewrites it in the current format: v2
+    header, every record carrying an explicit `n_devices` — and the
+    upgraded file re-reads bit-compatibly (same records, no drops)."""
+    path = str(tmp_path / "old.jsonl")
+    with open(path, "w") as f:
+        f.write(open(GOLDEN_PROFILE).read())
+    before, _ = read_profile(path)
+    rec = TraceRecorder.load(path)
+    rec.record(kind="score", path="packed_sparse", n_pairs=4, max_nodes=8,
+               mean_nodes=8.0, avg_degree=2.0, density=0.2, wall_s=0.002,
+               n_devices=8)
+    assert rec.flush() == 1
+    header = json.loads(open(path).readline())
     assert header == {"profile_format_version": PROFILE_FORMAT_VERSION,
                       "schema_digest": GOLDEN_SCHEMA_DIGEST}
+    records, dropped = read_profile(path)
+    assert dropped == 0
+    assert len(records) == len(before) + 1
+    assert [r.n_devices for r in records] == [1] * len(before) + [8]
+    for line in open(path).read().splitlines()[1:]:
+        assert "n_devices" in json.loads(line)
 
 
 @pytest.mark.parametrize("mutate", ["version", "digest", "not_json",
